@@ -1,0 +1,23 @@
+"""Shared benchmark plumbing: every benchmark module exposes
+``run() -> list[(name, us_per_call, derived)]`` rows; run.py aggregates into
+the required ``name,us_per_call,derived`` CSV."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+Row = tuple[str, float, str]
+
+
+def timed_us(fn: Callable, *args, repeat: int = 3, **kw) -> tuple[float, object]:
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best, out
+
+
+def row(name: str, us: float, derived: str) -> Row:
+    return (name, round(us, 2), derived)

@@ -1,0 +1,47 @@
+"""Fig 4: Monte-Carlo process-variation analysis of MAJ3 (the paper's SPICE
+study): (a) success rate per input pattern vs variation, (b) bitline
+deviation distribution vs variation (4-row activation, MAJ3(1,1,0))."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row, row, timed_us
+from repro.core import analog
+from repro.core.profiles import MFR_H
+
+KEY = jax.random.PRNGKey(4)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+
+    def patterns():
+        out = {}
+        for pv in (0.1, 0.2, 0.3, 0.4):
+            # all-same patterns are always safe; mixed patterns degrade.
+            dv_mixed = analog.deviation_distribution(
+                KEY, MFR_H, m_inputs=3, copies=1, n_neutral=1, ones=2,
+                process_variation=pv)
+            dv_same = analog.deviation_distribution(
+                KEY, MFR_H, m_inputs=3, copies=1, n_neutral=1, ones=3,
+                process_variation=pv)
+            out[pv] = (float(dv_mixed.mean()), float(dv_mixed.std()),
+                       float(dv_same.mean()))
+        return out
+
+    us, res = timed_us(patterns, repeat=1)
+    for pv, (mu, sd, mu_same) in res.items():
+        rows.append(row(f"fig04.deviation_pv{int(pv*100)}", us / 4,
+                        f"maj3(1,1,0) dV={mu*1e3:.1f}mV sd={sd*1e3:.2f}mV "
+                        f"all-ones dV={mu_same*1e3:.1f}mV"))
+    # Deviation drop vs single-row activation (paper: -41.14%).
+    dv1 = analog.single_row_deviation(KEY, MFR_H, process_variation=0.2)
+    dv3 = analog.deviation_distribution(KEY, MFR_H, m_inputs=3, copies=1,
+                                        n_neutral=1, ones=2,
+                                        process_variation=0.2)
+    drop = 1 - float(dv3.mean() / dv1.mean())
+    rows.append(row("fig04.deviation_drop_vs_single", us,
+                    f"sim={drop:.3f} paper=0.411"))
+    return rows

@@ -1,0 +1,39 @@
+"""Fig 11: effect of input replication on bitline deviation (a) and MAJ3
+success (b) for N in {4,8,16,32} across process-variation levels."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Row, row, timed_us
+from repro.core import analog
+from repro.core.profiles import MFR_H
+from repro.core.replication import plan
+
+KEY = jax.random.PRNGKey(11)
+
+
+def run() -> list[Row]:
+    rows: list[Row] = []
+    base = None
+    for n in (4, 8, 16, 32):
+        rp = plan(3, n)
+
+        def point():
+            dv = analog.deviation_distribution(
+                KEY, MFR_H, m_inputs=3, copies=rp.copies,
+                n_neutral=rp.n_neutral, ones=2, process_variation=0.2)
+            sr, _ = analog.maj_success_rate(
+                KEY, MFR_H, m_inputs=3, copies=rp.copies,
+                n_neutral=rp.n_neutral, n_bitlines=2048, n_patterns=32)
+            return float(dv.mean()), sr
+
+        us, (dv, sr) = timed_us(point, repeat=1)
+        if n == 4:
+            base = dv
+        boost = dv / base - 1
+        note = " paper:+159%" if n == 32 else ""
+        rows.append(row(f"fig11.n{n}", us,
+                        f"dV={dv*1e3:.1f}mV (+{100*boost:.0f}% vs N=4{note}) "
+                        f"maj3_success={sr:.4f}"))
+    return rows

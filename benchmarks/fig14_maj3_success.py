@@ -1,0 +1,28 @@
+"""Fig 14: MAJ3 success rate vs N_RG per manufacturer (PULSAR headline:
+97.91% at N=32 vs FracDRAM 78.85% — +24.18 points)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Row, row, timed_us
+from repro.core.charact import SuccessRateDb
+
+PAPER = {("H", 4): 0.7885, ("H", 32): 0.9791}
+
+
+def run() -> list[Row]:
+    db = SuccessRateDb(n_bitlines=1024, n_groups=6, n_patterns=32)
+    rows: list[Row] = []
+    for mfr, ns in (("H", (4, 8, 16, 32)), ("M", (4, 8, 16))):
+        for n in ns:
+            us, pt = timed_us(lambda m=mfr, nn=n: db.point(m, 3, nn),
+                              repeat=1)
+            ref = PAPER.get((mfr, n))
+            rows.append(row(
+                f"fig14.maj3_{mfr}_n{n}", us,
+                f"sim={pt.mean:.4f} iqr=[{pt.q1:.3f},{pt.q3:.3f}]"
+                + (f" paper={ref}" if ref else "")))
+    h4 = db.mean("H", 3, 4)
+    h32 = db.mean("H", 3, 32)
+    rows.append(row("fig14.pulsar_vs_fracdram_gain", 0.0,
+                    f"sim=+{100*(h32-h4):.1f}pts paper=+24.18pts"))
+    return rows

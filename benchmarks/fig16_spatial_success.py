@@ -1,0 +1,27 @@
+"""Fig 16: spatial distribution of MAJ3 success across a bank's subarrays
+(M-shaped systematic-variation profile; PULSAR beats FracDRAM in every
+subarray — paper: +66.23% average)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, row, timed_us
+from repro.core.charact import SuccessRateDb
+
+
+def run() -> list[Row]:
+    db = SuccessRateDb(n_bitlines=512, n_groups=4, n_patterns=24)
+    us, table = timed_us(lambda: db.fig16_spatial("H", n_subarrays=8),
+                         repeat=1)
+    pulsar = np.array([t[1] for t in table])
+    frac = np.array([t[2] for t in table])
+    gain = (pulsar.mean() / max(frac.mean(), 1e-9) - 1) * 100
+    better_everywhere = bool((pulsar >= frac).all())
+    # M-shape (visible on the unsaturated FracDRAM curve): success dips at
+    # the quarter positions relative to the edges.
+    m_shape = bool(frac[2] < frac[0] and frac[5] < frac[7])
+    return [row("fig16.spatial", us,
+                f"pulsar_mean={pulsar.mean():.3f} frac_mean={frac.mean():.3f} "
+                f"gain={gain:.0f}% (paper +66.23%) "
+                f"everywhere_better={better_everywhere} m_shape={m_shape}")]

@@ -1,0 +1,60 @@
+"""Fig 20 (Appendix B): real-world kernels on the PuM engine — PULSAR vs
+FracDRAM-configured engine vs this host's NumPy as the CPU reference.
+Bank-level parallelism: PULSAR:16 uses all 16 banks (the paper's best
+configuration, 1.59x over FracDRAM:16 / 43x over CPU on their Skylake)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Row, row
+from repro.core import realworld
+from repro.core.engine import PulsarEngine
+
+
+def _engines():
+    return (PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=True),
+            PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=False))
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(20)
+    rows: list[Row] = []
+
+    def emit(name, fn, *args, **kw):
+        pul, frac = _engines()
+        _, p_ms, cpu_ms = fn(pul, *args, **kw)
+        _, f_ms, _ = fn(frac, *args, **kw)
+        rows.append(row(
+            f"fig20.{name}", p_ms * 1e3,
+            f"pulsar={p_ms:.3f}ms frac={f_ms:.3f}ms host_numpy={cpu_ms:.3f}ms "
+            f"pulsar_vs_frac={f_ms/max(p_ms,1e-9):.2f}x"))
+
+    bitmaps = rng.integers(0, 2**63, (30, 1024), dtype=np.uint64)
+    emit("bmi", realworld.bmi_active_users, bitmaps)
+    col = rng.integers(0, 100000, 65536, dtype=np.uint64)
+    emit("bitweaving", realworld.bitweaving_scan, col, 1000, 60000)
+    n = 48
+    adj = np.triu((rng.random((n, n)) < 0.25).astype(np.uint8), 1)
+    emit("triangle_count", realworld.triangle_count, adj + adj.T)
+    cl_adj = np.triu((rng.random((32, 32)) < 0.4).astype(np.uint8), 1)
+    cl_adj = cl_adj + cl_adj.T
+    cliques = [(0, 1, 2), (3, 4, 5), (6, 7, 8)]
+    emit("kclique_star", realworld.kclique_star, cl_adj, cliques)
+    q = rng.integers(0, 256, (8, 32), dtype=np.int64)
+    r = rng.integers(0, 256, (256, 32), dtype=np.int64)
+    emit("knn", realworld.knn_distances, q, r)
+    img = rng.integers(0, 256, (64, 64), dtype=np.int64)
+    emit("image_seg", realworld.image_segmentation, img,
+         np.array([20, 90, 160, 230]))
+
+    # XNOR-Net conv layers (op-count model): LeNet-5 + VGG-13-ish layer.
+    pul, frac = _engines()
+    for name, spec in {"xnor_lenet_c3": (6, 16, 5, 5, 10, 10),
+                       "xnor_vgg_l5": (256, 256, 3, 3, 8, 8)}.items():
+        p_ms = realworld.xnor_conv_cost(pul, *spec)
+        f_ms = realworld.xnor_conv_cost(frac, *spec)
+        rows.append(row(f"fig20.{name}", p_ms * 1e3,
+                        f"pulsar={p_ms:.3f}ms frac={f_ms:.3f}ms "
+                        f"ratio={f_ms/max(p_ms,1e-9):.2f}x"))
+    return rows

@@ -1,0 +1,59 @@
+"""Kernel-layer microbenchmarks: wall time of the packed bit-plane ops on
+this host (jnp oracle path — the CPU execution path; the Pallas TPU kernels
+share the algorithm and are validated in interpret mode in tests).
+Derived column reports effective Gbit/s over the bitline lanes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row, row, timed_us
+from repro.kernels import ref
+
+W = 1 << 16  # packed words per plane = 2M bitlines
+
+
+def run() -> list[Row]:
+    rng = np.random.default_rng(0)
+    rows: list[Row] = []
+
+    x32 = jnp.asarray(rng.integers(0, 2**32, (31, W), dtype=np.uint64)
+                      .astype(np.uint32).view(np.int32))
+    fn = jax.jit(lambda a: ref.maj_n(a, 16))
+    fn(x32).block_until_ready()
+    us0, _ = timed_us(lambda: fn(x32).block_until_ready(), repeat=1)
+    rows.append(row("kernel.maj31_oracle", us0,
+                    f"{31*W*32/us0/1e3:.1f} Gbit/s (unpack-sum baseline)"))
+    fn = jax.jit(lambda a: ref.maj_n_fast(a, 16))
+    fn(x32).block_until_ready()
+    us, _ = timed_us(lambda: fn(x32).block_until_ready())
+    rows.append(row("kernel.maj31_bitsliced", us,
+                    f"{31*W*32/us/1e3:.1f} Gbit/s ({us0/us:.0f}x over "
+                    f"oracle — §Perf K0)"))
+
+    a = jnp.asarray(rng.integers(0, 2**32, (32, W), dtype=np.uint64)
+                    .astype(np.uint32).view(np.int32))
+    b = jnp.asarray(rng.integers(0, 2**32, (32, W), dtype=np.uint64)
+                    .astype(np.uint32).view(np.int32))
+    fn = jax.jit(ref.bitserial_add)
+    fn(a, b).block_until_ready()
+    us, _ = timed_us(lambda: fn(a, b).block_until_ready())
+    rows.append(row("kernel.bitserial_add32", us,
+                    f"{W*32/us:.0f} M 32-bit adds/s"))
+
+    fn = jax.jit(ref.bit_transpose32)
+    fn(a).block_until_ready()
+    us, _ = timed_us(lambda: fn(a).block_until_ready())
+    rows.append(row("kernel.bit_transpose32", us,
+                    f"{32*W*4/us/1e3:.1f} GB/s"))
+
+    v = jnp.asarray(rng.choice([0.0, 1.2], (32, W)).astype(np.float32))
+    c = jnp.asarray((20 + rng.standard_normal((32, W))).astype(np.float32))
+    fn = jax.jit(lambda vv, cc: ref.charge_share(vv, cc, vdd=1.2, c_bl=116.0))
+    fn(v, c).block_until_ready()
+    us, _ = timed_us(lambda: fn(v, c).block_until_ready())
+    rows.append(row("kernel.charge_share32", us,
+                    f"{32*W*8/us/1e3:.1f} GB/s"))
+    return rows

@@ -1,0 +1,55 @@
+"""Benchmark aggregator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig17]
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "fig03_fracdram_success",
+    "fig04_process_variation",
+    "fig05_majm_speedup_model",
+    "table1_nrg_discovery",
+    "fig11_input_replication",
+    "fig14_maj3_success",
+    "fig15_majm_success",
+    "fig16_spatial_success",
+    "fig17_microbenchmarks",
+    "fig18_nrg_sensitivity",
+    "fig19_destruction",
+    "fig20_realworld",
+    "kernel_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            for bname, us, derived in mod.run():
+                print(f"{bname},{us},\"{derived}\"", flush=True)
+        except Exception:  # noqa: BLE001 — keep the suite running
+            failed.append(name)
+            print(f"{name},-1,\"FAILED: "
+                  f"{traceback.format_exc().splitlines()[-1]}\"", flush=True)
+    if failed:
+        print(f"# {len(failed)} module(s) failed: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

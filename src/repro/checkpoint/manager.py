@@ -1,0 +1,142 @@
+"""Checkpointing: sharded save/restore with atomic commits, async writer,
+retention, and elastic RESHARD-ON-RESTORE (checkpoint written under mesh A
+restores under mesh B — required for elastic scaling / failure recovery with
+a different healthy-device count).
+
+Format: one .npz per pytree ("params", "opt_state", "meta") + a manifest.
+Single-process container: arrays are gathered to host; on a true multi-host
+deployment each host writes its addressable shards (the manifest layout
+already carries the pytree paths needed for that split).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        os.makedirs(directory, exist_ok=True)
+        self._pool = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        self._pending: concurrent.futures.Future | None = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def save(self, step: int, params: Any, opt_state: Any,
+             meta: dict | None = None) -> None:
+        """Async by default; device->host copy happens synchronously (so the
+        step can donate buffers), the file write overlaps the next steps."""
+        host = {
+            "params": _flatten(jax.device_get(params)),
+            "opt_state": _flatten(jax.device_get(opt_state)),
+        }
+        meta = dict(meta or {})
+        meta["step"] = step
+        meta["time"] = time.time()
+        if self.async_write:
+            self.wait()
+            self._pending = self._pool.submit(self._write, step, host, meta)
+        else:
+            self._write(step, host, meta)
+
+    def _write(self, step: int, host: dict, meta: dict) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        for name, flat in host.items():
+            np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):      # re-save of the same step (idempotent)
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic commit
+        self._gc()
+
+    def wait(self) -> None:
+        with self._lock:
+            if self._pending is not None:
+                self._pending.result()
+                self._pending = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------ #
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, params_template: Any,
+                opt_template: Any, shardings: Any | None = None
+                ) -> tuple[Any, Any, dict]:
+        """Restore into host trees; optionally device_put against NEW
+        shardings (elastic reshard: the checkpoint is mesh-agnostic)."""
+        d = self._step_dir(step)
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        params = _unflatten_into(
+            params_template,
+            dict(np.load(os.path.join(d, "params.npz"), allow_pickle=False)))
+        opt = _unflatten_into(
+            opt_template,
+            dict(np.load(os.path.join(d, "opt_state.npz"),
+                         allow_pickle=False)))
+        if shardings is not None:
+            params = jax.device_put(params, shardings["params"])
+            opt = jax.device_put(opt, shardings["opt_state"])
+        return params, opt, meta

@@ -1,0 +1,35 @@
+"""PULSAR core: the paper's contribution as a composable library.
+
+Layers (bottom-up):
+  geometry/profiles  — DRAM organization + manufacturer behavior,
+  decoder            — hierarchical row decoder, simultaneous activation sets,
+  timing/commands    — DDR4 timings, violated-timing PuM command programs,
+  analog             — charge sharing + process variation (success rates),
+  chip               — bit-exact logical PuM state machine,
+  replication/pulsar — PULSAR's input replication + staged MAJ execution,
+  layout/alu         — vertical data layout + dual-rail bit-serial ALU,
+  cost_model/charact — closed-form costs, Monte-Carlo characterization,
+  destruction        — cold-boot content destruction use case,
+  engine/realworld   — user-facing bulk SIMD API + application kernels.
+"""
+
+from repro.core.alu import BitSerialAlu, Vec
+from repro.core.charact import SuccessRateDb, default_db
+from repro.core.chip import PulsarChip, majority_bits
+from repro.core.cost_model import CostModel, MICROBENCHES, OpCost
+from repro.core.decoder import RowDecoder
+from repro.core.engine import PulsarEngine
+from repro.core.geometry import DramGeometry, PAPER_MODULE, TEST_GEOMETRY
+from repro.core.profiles import MFR_H, MFR_M, MFR_S, PROFILES, MfrProfile
+from repro.core.pulsar import PulsarExecutor, build_region
+from repro.core.replication import ReplicationPlan, fracdram_plan, plan
+from repro.core.timing import DDR4_2400, DramTimings
+
+__all__ = [
+    "BitSerialAlu", "Vec", "SuccessRateDb", "default_db", "PulsarChip",
+    "majority_bits", "CostModel", "MICROBENCHES", "OpCost", "RowDecoder",
+    "PulsarEngine", "DramGeometry", "PAPER_MODULE", "TEST_GEOMETRY",
+    "MFR_H", "MFR_M", "MFR_S", "PROFILES", "MfrProfile", "PulsarExecutor",
+    "build_region", "ReplicationPlan", "fracdram_plan", "plan",
+    "DDR4_2400", "DramTimings",
+]

@@ -1,0 +1,147 @@
+"""Charge-sharing analog model (paper §3.1.1, §5.1; Figs 4 & 11).
+
+Charge conservation on a bitline precharged to VDD/2 when a set of cells is
+simultaneously connected:
+
+    dV = sum_i C_i * (V_i - VDD/2) / (C_bl + sum_i C_i)
+
+Data cells hold V_i in {0, VDD}; Frac-neutral cells hold ~VDD/2 and therefore
+add denominator capacitance without moving the numerator. The sense amplifier
+resolves sign(dV - offset + noise).
+
+Per-bitline *static* draws (process variation): cell capacitances
+C_i ~ N(C, (pv*C)^2) and sense offset ~ N(0, sigma_off). Per-trial *dynamic*
+noise: N(0, sigma_trial) plus data-pattern coupling ~ N(0, sigma_cpl*sqrt(N))
+(random patterns activate neighbor interference — §6.1.1 observation 2).
+
+The paper's "success rate" counts a bitline as stable only if it is correct
+over ALL trials (10^4 random-pattern trials); we model that as the static
+margin exceeding the ~3.9-sigma trial-noise tail.
+
+Everything is vectorized over bitlines in JAX (the SPICE Monte Carlo of
+Figs 4/11 becomes a jit'd batched computation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.profiles import MfrProfile
+
+# Quantile of the max |N(0,1)| over ~1e4 trials: P(|z| < q)^(1e4) ~ 0.5
+TRIAL_TAIL_SIGMA = 3.9
+
+
+@dataclasses.dataclass(frozen=True)
+class BitlineSample:
+    """Per-bitline static condition draws."""
+    cell_caps: jax.Array      # [n_rows, n_bitlines] femto-farads
+    sense_offset: jax.Array   # [n_bitlines] volts
+
+
+def draw_bitlines(key: jax.Array, profile: MfrProfile, n_rows: int,
+                  n_bitlines: int, process_variation: float | None = None
+                  ) -> BitlineSample:
+    kc, ko = jax.random.split(key)
+    pv = profile.process_variation if process_variation is None else process_variation
+    caps = profile.cell_cap_ff * (
+        1.0 + pv * jax.random.normal(kc, (n_rows, n_bitlines)))
+    caps = jnp.clip(caps, 0.05 * profile.cell_cap_ff, None)
+    offs = profile.sense_offset_sigma * jax.random.normal(ko, (n_bitlines,))
+    return BitlineSample(cell_caps=caps, sense_offset=offs)
+
+
+@partial(jax.jit, static_argnames=("vdd", "c_bl"))
+def bitline_deviation(cell_values: jax.Array, neutral_mask: jax.Array,
+                      cell_caps: jax.Array, *, vdd: float,
+                      c_bl: float) -> jax.Array:
+    """dV per bitline.
+
+    cell_values: [n_rows, B] in {0,1}; neutral_mask: [n_rows] bool (Frac rows);
+    cell_caps: [n_rows, B]. Returns [B] volts.
+    """
+    v = jnp.where(neutral_mask[:, None], 0.5 * vdd,
+                  cell_values.astype(jnp.float32) * vdd)
+    num = jnp.sum(cell_caps * (v - 0.5 * vdd), axis=0)
+    den = c_bl + jnp.sum(cell_caps, axis=0)
+    return num / den
+
+
+def maj_success_rate(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
+                     copies: int, n_neutral: int, n_bitlines: int = 4096,
+                     n_patterns: int = 64,
+                     process_variation: float | None = None,
+                     ) -> tuple[float, jax.Array]:
+    """Monte-Carlo success rate of MAJ-M with input replication.
+
+    Returns (mean success rate, per-bitline stable mask). Patterns sweep the
+    worst-case input imbalance (|ones-zeros| == 1) plus random patterns,
+    mirroring §6.1.1's random-data experiments.
+    """
+    n_rows = m_inputs * copies + n_neutral
+    kd, kp, kn = jax.random.split(key, 3)
+    sample = draw_bitlines(kd, profile, n_rows, n_bitlines, process_variation)
+
+    # Random input patterns per bitline (the paper stores the same operand
+    # value across a row, but per-bitline elements differ -> effectively
+    # random per bitline). Worst-case patterns dominate stability, so we
+    # include all minimal-margin patterns among the random draws.
+    patterns = jax.random.bernoulli(
+        kp, 0.5, (n_patterns, m_inputs, n_bitlines)).astype(jnp.float32)
+    neutral = jnp.concatenate(
+        [jnp.zeros(m_inputs * copies, dtype=bool),
+         jnp.ones(n_neutral, dtype=bool)])
+
+    def pattern_margin(pat):  # pat: [m_inputs, B]
+        cells = jnp.repeat(pat, copies, axis=0)  # replication (Fig 10)
+        cells = jnp.concatenate(
+            [cells, jnp.zeros((n_neutral, cells.shape[1]))], axis=0)
+        dv = bitline_deviation(cells, neutral, sample.cell_caps,
+                               vdd=profile.vdd, c_bl=profile.bitline_cap_ff)
+        maj = (jnp.sum(pat, axis=0) > m_inputs / 2).astype(jnp.float32)
+        sign = jnp.where(maj > 0.5, 1.0, -1.0)
+        # Sensed bit = (dv - offset + noise) > 0; margin toward the correct
+        # value is sign * (dv - offset).
+        return sign * (dv - sample.sense_offset)
+
+    margins = jax.vmap(pattern_margin)(patterns)  # [P, B]
+    worst = jnp.min(margins, axis=0)              # [B]
+    trial_tail = TRIAL_TAIL_SIGMA * jnp.sqrt(
+        profile.trial_noise_sigma ** 2
+        + (profile.coupling_sigma ** 2) * n_rows)
+    stable = worst > trial_tail
+    return float(jnp.mean(stable)), stable
+
+
+def deviation_distribution(key: jax.Array, profile: MfrProfile, *,
+                           m_inputs: int, copies: int, n_neutral: int,
+                           ones: int, n_bitlines: int = 4096,
+                           process_variation: float | None = None
+                           ) -> jax.Array:
+    """|dV| distribution for a fixed input pattern with ``ones`` logic-1
+    inputs out of ``m_inputs`` (Figs 4b / 11a)."""
+    n_rows = m_inputs * copies + n_neutral
+    sample = draw_bitlines(key, profile, n_rows, n_bitlines,
+                           process_variation)
+    pat = jnp.concatenate([jnp.ones(ones), jnp.zeros(m_inputs - ones)])
+    cells = jnp.repeat(pat[:, None], copies, axis=0) * jnp.ones((1, n_bitlines))
+    cells = jnp.concatenate(
+        [cells, jnp.zeros((n_neutral, n_bitlines))], axis=0)
+    neutral = jnp.concatenate(
+        [jnp.zeros(m_inputs * copies, dtype=bool),
+         jnp.ones(n_neutral, dtype=bool)])
+    return bitline_deviation(cells, neutral, sample.cell_caps,
+                             vdd=profile.vdd, c_bl=profile.bitline_cap_ff)
+
+
+def single_row_deviation(key: jax.Array, profile: MfrProfile, *,
+                         n_bitlines: int = 4096,
+                         process_variation: float | None = None) -> jax.Array:
+    """Nominal single-row activation deviation (Fig 4b comparison point)."""
+    return deviation_distribution(
+        key, profile, m_inputs=1, copies=1, n_neutral=0, ones=1,
+        n_bitlines=n_bitlines, process_variation=process_variation)

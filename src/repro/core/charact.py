@@ -1,0 +1,155 @@
+"""Characterization harness (paper §6.1.1, Figs 14-16, Table 1).
+
+Runs the analog Monte-Carlo model across (manufacturer, MAJ-M, N_RG) and
+aggregates success rates the way the paper does: per-row-group distributions
+over sampled N_RGs in sampled subarrays, with systematic (spatial) process
+variation across subarrays (Fig 16's M-shaped profile) on top of the random
+per-cell variation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import zlib
+from functools import lru_cache
+
+import jax
+import numpy as np
+
+from repro.core import analog
+from repro.core.profiles import PROFILES, MfrProfile
+from repro.core.replication import plan as replication_plan, plan_pow2
+
+
+def spatial_pv_multiplier(subarray: int, n_subarrays: int) -> float:
+    """Systematic process-variation modulation across a bank.
+
+    Fig 16 reports an M-shaped success-rate profile (peaks in the 1st and 3rd
+    quarters). Success falls when variation rises, so we modulate sigma_pv
+    with a W-shaped (inverted-M) profile: minima at x=0.25 and x=0.75.
+    """
+    x = (subarray + 0.5) / n_subarrays
+    # cos(4*pi*x) has minima at 0.25/0.75: map to [0.9, 1.25] multiplier.
+    return 1.075 + 0.175 * math.cos(4 * math.pi * x)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuccessPoint:
+    mfr: str
+    m_inputs: int
+    n_rg: int
+    mean: float
+    q1: float
+    q3: float
+    lo: float
+    hi: float
+
+
+class SuccessRateDb:
+    """Caches Monte-Carlo success rates; the cost model and benchmarks query
+    it instead of re-simulating."""
+
+    def __init__(self, n_bitlines: int = 2048, n_groups: int = 24,
+                 n_patterns: int = 48, seed: int = 0):
+        self.n_bitlines = n_bitlines
+        self.n_groups = n_groups
+        self.n_patterns = n_patterns
+        self.seed = seed
+        self._cache: dict[tuple, SuccessPoint] = {}
+
+    def point(self, mfr: str, m_inputs: int, n_rg: int,
+              subarray_frac: float | None = None,
+              plan_style: str = "max") -> SuccessPoint:
+        key = (mfr, m_inputs, n_rg,
+               None if subarray_frac is None else round(subarray_frac, 3),
+               plan_style)
+        if key in self._cache:
+            return self._cache[key]
+        profile = PROFILES[mfr]
+        if n_rg > profile.max_simul_rows:
+            raise ValueError(f"Mfr {mfr} caps at {profile.max_simul_rows} rows")
+        rp = (plan_pow2 if plan_style == "pow2" else replication_plan)(
+            m_inputs, n_rg)
+        pv_mult = (spatial_pv_multiplier(int(subarray_frac * 16), 16)
+                   if subarray_frac is not None else 1.0)
+        # Stable (non-salted) per-key hash for reproducible PRNG streams.
+        key_hash = zlib.crc32(repr(key).encode())
+        rates = []
+        for g in range(self.n_groups):
+            key_g = jax.random.PRNGKey(self.seed * 7919 + key_hash % (2**31) + g)
+            rate, _ = analog.maj_success_rate(
+                key_g, profile, m_inputs=m_inputs, copies=rp.copies,
+                n_neutral=rp.n_neutral, n_bitlines=self.n_bitlines,
+                n_patterns=self.n_patterns,
+                process_variation=profile.process_variation * pv_mult)
+            rates.append(rate)
+        arr = np.array(rates)
+        sp = SuccessPoint(mfr, m_inputs, n_rg, float(arr.mean()),
+                          float(np.quantile(arr, 0.25)),
+                          float(np.quantile(arr, 0.75)),
+                          float(arr.min()), float(arr.max()))
+        self._cache[key] = sp
+        return sp
+
+    def mean(self, mfr: str, m_inputs: int, n_rg: int,
+             plan_style: str = "max") -> float:
+        return self.point(mfr, m_inputs, n_rg, plan_style=plan_style).mean
+
+    # ------------------------------------------------------------------ #
+
+    def fig14_maj3_vs_n(self, mfr: str) -> dict[int, SuccessPoint]:
+        """MAJ3 success vs N_RG (Fig 14)."""
+        prof = PROFILES[mfr]
+        out = {}
+        for n in (4, 8, 16, 32):
+            if n <= prof.max_simul_rows:
+                out[n] = self.point(mfr, 3, n)
+        return out
+
+    def fig15_majm(self, mfr: str) -> dict[tuple[int, int], SuccessPoint]:
+        """MAJ3/5/7/9 success vs N_RG (Fig 15)."""
+        prof = PROFILES[mfr]
+        out = {}
+        for m in (3, 5, 7, 9):
+            for n in (4, 8, 16, 32):
+                if n >= m and n <= prof.max_simul_rows:
+                    out[(m, n)] = self.point(mfr, m, n)
+        return out
+
+    def fig16_spatial(self, mfr: str = "H", n_subarrays: int = 16,
+                      n_rg: int = 32) -> list[tuple[int, float, float]]:
+        """Per-subarray MAJ3 success for PULSAR vs FracDRAM (Fig 16).
+        Returns [(subarray, pulsar_rate, fracdram_rate)]."""
+        prof = PROFILES[mfr]
+        n_rg = min(n_rg, prof.max_simul_rows)
+        rows = []
+        for sa in range(n_subarrays):
+            frac = (sa + 0.5) / n_subarrays
+            p = self.point(mfr, 3, n_rg, subarray_frac=frac)
+            f = self.point(mfr, 3, 4, subarray_frac=frac)
+            rows.append((sa, p.mean, f.mean))
+        return rows
+
+    def best_n_rg(self, mfr: str, m_inputs: int,
+                  latency_fn) -> tuple[int, float]:
+        """Pick the N_RG maximizing throughput = SR / latency(M, N) —
+        the paper's per-op configuration search (§6.1.2)."""
+        prof = PROFILES[mfr]
+        best, best_t = None, -1.0
+        n = 4
+        while n <= prof.max_simul_rows:
+            if n >= m_inputs:
+                sr = self.mean(mfr, m_inputs, n)
+                thr = sr / latency_fn(m_inputs, n)
+                if thr > best_t:
+                    best, best_t = n, thr
+            n <<= 1
+        if best is None:
+            raise ValueError(f"MAJ{m_inputs} unsupported on Mfr {mfr}")
+        return best, best_t
+
+
+@lru_cache(maxsize=2)
+def default_db(seed: int = 0) -> SuccessRateDb:
+    return SuccessRateDb(seed=seed)

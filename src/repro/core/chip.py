@@ -1,0 +1,275 @@
+"""Logical DRAM chip model: bit-exact PuM state machine.
+
+State per bank: packed ``uint32`` payload ``[rows, words]`` plus a per-row
+``neutral`` mask (Frac VDD/2 rows carry no logical value until overwritten).
+
+Every PuM mutation goes through ``execute``, which pairs the *logical* effect
+with the *command program* (commands.py) so correctness and latency/energy
+accounting always agree. The analog layer (analog.py) independently models
+success rates; `PulsarChip.apa_maj` can optionally apply a per-bitline
+stability mask drawn from it (fault injection for the reliability tests).
+
+The model is NumPy-based (host metadata path — command streams are
+inherently sequential); the bulk bit-plane math (majority over up to 32
+rows) calls the same packed-word algorithms the Pallas kernels implement,
+via kernels ref/ops (single source of truth).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import commands as cmds
+from repro.core.decoder import RowDecoder
+from repro.core.geometry import DramGeometry
+from repro.core.profiles import MfrProfile
+from repro.core.timing import DDR4_2400, DramTimings
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Cumulative cost accounting for a chip session."""
+    latency_ns: float = 0.0
+    energy_j: float = 0.0
+    n_acts: int = 0
+    n_pres: int = 0
+    n_rdwr: int = 0
+    n_ops: int = 0
+    trace: list | None = None  # optional (op_name, latency) log
+
+    def add(self, name: str, res: cmds.ScheduleResult) -> None:
+        self.latency_ns += res.total_ns
+        self.energy_j += res.energy_j
+        self.n_acts += res.n_acts
+        self.n_pres += res.n_pres
+        self.n_rdwr += res.n_rdwr
+        self.n_ops += 1
+        if self.trace is not None:
+            self.trace.append((name, res.total_ns))
+
+
+def _popcount_rows(rows: np.ndarray) -> np.ndarray:
+    """Per-bit-position vote count across rows: [N, W] uint32 -> [W] counts
+    per bit, returned as an int32 array broadcast over bits via bit-slicing.
+
+    Implemented as the same bit-sliced carry-save counter the Pallas kernel
+    uses (see kernels/maj_n.py); here via NumPy for the host path.
+    """
+    n = rows.shape[0]
+    k = max(1, (n).bit_length())
+    planes = [np.zeros_like(rows) for _ in range(k + 1)]
+    for i in range(n):
+        carry = rows[i]
+        for j in range(k + 1):
+            t = planes[j] ^ carry
+            carry = planes[j] & carry
+            planes[j] = t
+    # Reassemble counts per bit: counts = sum planes[j] * 2^j, but we only
+    # need comparisons; return planes for threshold tests.
+    return np.stack(planes)  # [k+1, W] bit-planes of the count
+
+
+def majority_bits(rows: np.ndarray, threshold: int) -> np.ndarray:
+    """Packed-word test (count_of_ones_per_bit >= threshold) across rows.
+
+    rows: [N, W] uint32. threshold in [1, N]. Returns [W] uint32.
+    Uses the overflow-counter trick: initialize the counter to
+    (2^K - threshold) in every bit lane; after adding the N vote planes,
+    lanes whose count >= threshold have overflowed past 2^K.
+    """
+    n, w = rows.shape
+    if not (1 <= threshold <= n):
+        raise ValueError(f"threshold {threshold} out of range for {n} rows")
+    k = int(n).bit_length()  # counter width; overflow bit tracked separately
+    init = (1 << k) - threshold
+    planes = [np.full(w, 0xFFFFFFFF, np.uint32) if (init >> j) & 1
+              else np.zeros(w, np.uint32) for j in range(k)]
+    overflow = np.zeros(w, np.uint32)
+    for i in range(n):
+        carry = rows[i]
+        for j in range(k):
+            t = planes[j] ^ carry
+            carry = planes[j] & carry
+            planes[j] = t
+        overflow |= carry
+    return overflow
+
+
+class PulsarChip:
+    """One DRAM rank (module-level lockstep) with PuM capability."""
+
+    def __init__(self, geometry: DramGeometry, profile: MfrProfile,
+                 seed: int = 0, timings: DramTimings = DDR4_2400,
+                 trace: bool = False):
+        self.geometry = geometry
+        self.profile = profile
+        self.timings = timings
+        self.decoder = RowDecoder.build(geometry, profile, seed)
+        self.scheduler = cmds.CommandScheduler(timings)
+        self.rng = np.random.default_rng(seed + 0x5AF)
+        g = geometry
+        self.banks = np.zeros((g.banks, g.rows_per_bank, g.words_per_row),
+                              np.uint32)
+        self.neutral = np.zeros((g.banks, g.rows_per_bank), bool)
+        self.stats = OpStats(trace=[] if trace else None)
+        self._wr_bursts = max(1, g.row_bits // 512)  # BL8 x 64-bit bus
+
+    # ------------------------------------------------------------------ #
+    # Host-side (nominal-timing) access
+    # ------------------------------------------------------------------ #
+
+    def write_row(self, bank: int, row: int, data: np.ndarray) -> None:
+        data = np.asarray(data, np.uint32)
+        if data.shape != (self.geometry.words_per_row,):
+            raise ValueError(f"row payload must be [{self.geometry.words_per_row}]")
+        self.banks[bank, row] = data
+        self.neutral[bank, row] = False
+        prog = cmds.prog_write_row(bank, row, self._wr_bursts, self.timings)
+        self.stats.add("write_row", self.scheduler.schedule(prog))
+
+    def read_row(self, bank: int, row: int) -> np.ndarray:
+        if self.neutral[bank, row]:
+            raise RuntimeError(f"reading neutral (VDD/2) row {row}: undefined data")
+        prog = cmds.prog_read_row(bank, row, self._wr_bursts, self.timings)
+        self.stats.add("read_row", self.scheduler.schedule(prog))
+        return self.banks[bank, row].copy()
+
+    def peek(self, bank: int, row: int) -> np.ndarray:
+        """Test-only: read without cost accounting."""
+        return self.banks[bank, row].copy()
+
+    # ------------------------------------------------------------------ #
+    # PuM primitives
+    # ------------------------------------------------------------------ #
+
+    def frac(self, bank: int, row: int) -> None:
+        """Put ``row`` into the neutral VDD/2 state (FracDRAM op).
+
+        On Mfr. M (frac unsupported, footnote 4) the same logical effect is
+        obtained by writing the sense-amp bias pattern; the neutral flag is
+        still what the charge-sharing vote consumes.
+        """
+        if self.profile.frac_supported:
+            prog = cmds.prog_frac(bank, row, self.timings)
+            self.stats.add("frac", self.scheduler.schedule(prog))
+        else:
+            if not self.profile.sa_bias_neutral:
+                raise RuntimeError(
+                    f"Mfr {self.profile.name}: no neutral-row mechanism")
+            # Mfr M: re-init the row with the bias pattern via RowClone from
+            # a resident pattern row (one AAP) — a full WR stream is never
+            # needed after the one-time pattern-row setup.
+            prog = cmds.prog_aap_multi_row_init(bank, row, row, self.timings)
+            self.stats.add("frac.bias_clone", self.scheduler.schedule(prog))
+        self.neutral[bank, row] = True
+
+    def frac_block(self, bank: int, rf: int, rs: int) -> tuple[int, ...]:
+        """Put a whole decoder block into the neutral state.
+
+        Mfr H: Frac has no multi-row variant -> one Frac per row.
+        Mfr M: bias pattern re-init is a RowClone seed + one Multi-RowInit
+        over the block (2 AAPs regardless of block size)."""
+        rows = self.decoder.activated_rows(rf, rs)
+        if self.profile.frac_supported:
+            for r in rows:
+                self.frac(bank, r)
+            return rows
+        if not self.profile.sa_bias_neutral:
+            raise RuntimeError(
+                f"Mfr {self.profile.name}: no neutral-row mechanism")
+        prog = cmds.prog_aap_multi_row_init(bank, rf, rs, self.timings)
+        self.stats.add("frac.bias_seed", self.scheduler.schedule(prog))
+        if len(rows) > 1:
+            self.stats.add("frac.bias_mri", self.scheduler.schedule(prog))
+        for r in rows:
+            self.neutral[bank, r] = True
+        return rows
+
+    def apa_maj(self, bank: int, rf: int, rs: int,
+                stability_mask: np.ndarray | None = None) -> tuple[int, ...]:
+        """Charge-sharing APA (§5.2.2): simultaneous activation of the
+        decoder-determined row set; every bitline resolves to the weighted
+        majority of non-neutral activated cells; ALL activated rows and the
+        row buffer take the result.
+
+        ``stability_mask``: optional [row_bits] bool — bitlines that resolve
+        correctly (from the analog model). Unstable bitlines flip to the
+        complement (worst-case deterministic fault model).
+        Returns the activated row set.
+        """
+        rows = self.decoder.activated_rows(rf, rs)
+        if len(rows) < 2:
+            raise RuntimeError(
+                f"APA({rf},{rs}) activated {rows}: not a multi-row group "
+                f"(Mfr {self.profile.name})")
+        data_rows = [r for r in rows if not self.neutral[bank, r]]
+        n_data = len(data_rows)
+        if n_data == 0:
+            raise RuntimeError("charge sharing over only neutral rows")
+        # Even vote counts can tie (equilibrium, §2.3); PULSAR's replication
+        # plans guarantee |net| >= copies > 0 so ties never occur there. If a
+        # tie does occur, the sense amp resolves to its bias (deterministic 0
+        # here; the *randomness* of unbiased ties is what QUAC-TRNG exploits,
+        # out of scope). Threshold count > n_data/2 ==> count >= n_data//2+1.
+        votes = self.banks[bank, list(data_rows)]
+        result = majority_bits(votes, n_data // 2 + 1)
+        if stability_mask is not None:
+            flip = ~_mask_to_words(stability_mask)
+            result = result ^ flip
+        for r in rows:
+            self.banks[bank, r] = result
+            self.neutral[bank, r] = False
+        prog = cmds.prog_apa_charge_share(bank, rf, rs, self.timings)
+        self.stats.add(f"apa_maj{n_data}", self.scheduler.schedule(prog))
+        return rows
+
+    def multi_row_init(self, bank: int, rf: int, rs: int) -> tuple[int, ...]:
+        """Multi-RowInit (§5.2.1): copy R_F's content into every row of the
+        activated group (R_F fully sensed first; sense amps overdrive)."""
+        rows = self.decoder.activated_rows(rf, rs)
+        if self.neutral[bank, rf]:
+            raise RuntimeError("Multi-RowInit source row is neutral")
+        src = self.banks[bank, rf].copy()
+        for r in rows:
+            self.banks[bank, r] = src
+            self.neutral[bank, r] = False
+        # rf itself keeps its value (it is in the activated set by
+        # construction when rf/rs share the subarray; if not, rs-only set
+        # still gets rf's data because the sense amps latched rf).
+        prog = cmds.prog_aap_multi_row_init(bank, rf, rs, self.timings)
+        self.stats.add(f"multi_row_init{len(rows)}",
+                       self.scheduler.schedule(prog))
+        return rows
+
+    def row_clone(self, bank: int, src: int, dst: int) -> None:
+        """RowClone baseline [25, 98]: copy one row to one row (AAP)."""
+        if self.neutral[bank, src]:
+            raise RuntimeError("RowClone source row is neutral")
+        self.banks[bank, dst] = self.banks[bank, src]
+        self.neutral[bank, dst] = False
+        prog = cmds.prog_aap_multi_row_init(bank, src, dst, self.timings)
+        self.stats.add("row_clone", self.scheduler.schedule(prog))
+
+    def bulk_write(self, bank: int, rf: int, rs: int,
+                   data: np.ndarray) -> tuple[int, ...]:
+        """Bulk-Write (§5.2.3): one WR stream drives all activated rows."""
+        rows = self.decoder.activated_rows(rf, rs)
+        data = np.asarray(data, np.uint32)
+        for r in rows:
+            self.banks[bank, r] = data
+            self.neutral[bank, r] = False
+        prog = cmds.prog_bulk_write(bank, rf, rs, self._wr_bursts,
+                                    self.timings)
+        self.stats.add(f"bulk_write{len(rows)}", self.scheduler.schedule(prog))
+        return rows
+
+
+def _mask_to_words(mask: np.ndarray) -> np.ndarray:
+    """[bits] bool -> packed uint32 words (bit 32w+b -> bit b of word w;
+    little-endian platform assumed, as with all packed layouts here)."""
+    bits = np.asarray(mask, np.uint8)
+    if bits.size % 32:
+        raise ValueError("mask length must be a multiple of 32")
+    return np.packbits(bits, bitorder="little").view(np.uint32).copy()

@@ -1,0 +1,274 @@
+"""PulsarEngine — the user-facing PuM compute API.
+
+Two coupled planes:
+  * dataplane: bit-exact results. ``backend="fast"`` computes on packed
+    NumPy words via the same bit-plane algorithms (vectorized, scales to
+    millions of elements; the TPU-accelerated variant of these inner loops is
+    kernels/ — same algorithms, Pallas-tiled). ``backend="sim"`` routes every
+    operation through the DRAM chip model + command programs (bit-exact AND
+    cycle-exact; used by tests and small demos).
+  * cost plane: every op is priced by the closed-form cost model with the
+    paper's methodology (per-op best-throughput N_RG, stable-lane efficiency,
+    optional multi-bank parallelism) so application benchmarks (Fig 20)
+    report PuM latencies regardless of dataplane backend.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.alu import BitSerialAlu
+from repro.core.charact import SuccessRateDb, default_db
+from repro.core.chip import PulsarChip
+from repro.core.cost_model import CostModel, OpCost, ZERO
+from repro.core.geometry import DramGeometry, PAPER_MODULE
+from repro.core.profiles import PROFILES
+from repro.core.pulsar import PulsarExecutor
+
+
+@dataclasses.dataclass
+class EngineStats:
+    latency_ns: float = 0.0
+    energy_j: float = 0.0
+    n_sequences: int = 0
+    lane_efficiency: float = 1.0  # min success rate over ops used
+
+    def charge(self, cost: OpCost, n_vec_rows: int, banks: int,
+               success: float) -> None:
+        eff_rows = -(-n_vec_rows // banks)  # bank-level parallelism
+        self.latency_ns += cost.latency_ns * eff_rows
+        self.energy_j += cost.energy_j * n_vec_rows
+        self.n_sequences += cost.n_sequences * n_vec_rows
+        self.lane_efficiency = min(self.lane_efficiency, success)
+
+
+class PulsarEngine:
+    """Bulk bitwise/bit-serial integer SIMD on (simulated) PuM DRAM."""
+
+    def __init__(self, mfr: str = "M", width: int = 32,
+                 row_bits: int = 65536, banks: int = 16,
+                 backend: str = "fast",
+                 success_db: SuccessRateDb | None = None,
+                 use_pulsar: bool = True, chained: bool = False,
+                 seed: int = 0):
+        self.profile = PROFILES[mfr]
+        self.mfr = mfr
+        self.width = width
+        self.row_bits = row_bits
+        self.banks = banks
+        self.backend = backend
+        self.use_pulsar = use_pulsar  # False => FracDRAM baseline costs
+        self.chained = chained and use_pulsar  # chained-staging (§Perf P4)
+        self.cost = CostModel(row_bits=row_bits)
+        self.db = success_db or default_db()
+        self.stats = EngineStats()
+        self._best_cfg_cache: dict[int, tuple[int, int, float]] = {}
+        if backend == "sim":
+            geom = DramGeometry(row_bits=min(row_bits, 2048),
+                                rows_per_subarray=512, subarrays_per_bank=2,
+                                banks=2)
+            chip = PulsarChip(geom, self.profile, seed=seed)
+            chip.decoder = chip.decoder.__class__(geom, self.profile, None)
+            self._alu = BitSerialAlu(PulsarExecutor(chip, 0, 0), width=width)
+
+    # ------------------------------------------------------------------ #
+    # Cost plumbing
+    # ------------------------------------------------------------------ #
+
+    def _kind_cost(self, kind: str, m: int, n_rg: int, w: int,
+                   n_planes: int | None, n_rg3: int | None = None) -> OpCost:
+        fs = self.profile.frac_supported
+        ps = "pow2" if self.use_pulsar else "max"
+        kw = dict(frac_supported=fs, plan_style=ps)
+        ckw = dict(kw, chained=self.chained)
+        c = self.cost
+        if kind in ("and2", "or2"):
+            return c.logic2(min(3, m), n_rg, **kw)
+        if kind == "xor2":
+            return c.xor2(min(3, m), n_rg, **kw)
+        if kind == "add" or kind == "sub":
+            return c.add(w, m, n_rg, n_rg3, **ckw)
+        if kind == "mul":
+            return c.mul(w, m, n_rg, n_rg3, **ckw)
+        if kind == "div":
+            return c.div(w, m, n_rg, n_rg3, **ckw)
+        if kind in ("reduce_and", "reduce_or"):
+            return c.reduce_tree(n_planes or w, m, n_rg, **ckw)
+        if kind == "reduce_xor":
+            return c.xor_reduce(n_planes or w, m, n_rg, **ckw)
+        if kind == "popcount":
+            out_w = max(1, (n_planes or w).bit_length())
+            return (n_planes or w) * out_w * c.full_adder(m, n_rg, n_rg3,
+                                                          **ckw)
+        if kind == "compare":
+            return c.add(w + 1, m, n_rg, n_rg3, **ckw)
+        if kind in ("load", "store"):
+            return (c.write_row() if kind == "load" else c.read_row()) * (2 * w)
+        raise KeyError(kind)
+
+    _ARITH = ("add", "sub", "mul", "div", "popcount", "compare")
+
+    def _cfg_for(self, kind: str, w: int, n_planes: int | None
+                 ) -> tuple[int, int, float, OpCost]:
+        """Best (maj_fan_in, n_rg[, n_rg3]) for this op kind: minimizes
+        latency / success_rate — the paper's per-op configuration search
+        ("we choose the N_RG that produces the highest throughput").
+        Arithmetic kinds search MAJ3/MAJ5 sub-op configs independently."""
+        if not self.use_pulsar:
+            # FracDRAM baseline: MAJ3 on 4-row activation only.
+            sr = self.db.mean(self.mfr, 3, 4)
+            return 3, 4, sr, self._kind_cost(kind, 3, 4, w, n_planes, 4)
+        key = (kind, w, n_planes)
+        if key not in self._best_cfg_cache:
+            prof = self.profile
+            cap = prof.max_simul_rows
+            pows = [n for n in (4, 8, 16, 32) if n <= cap]
+
+            def sr_of(m, n):
+                return (self.db.mean(self.mfr, m, n, plan_style="pow2")
+                        if n >= m else 0.0)
+
+            candidates: list[tuple[int, int, int | None]] = []
+            if kind in self._ARITH:
+                for n3 in pows:                       # MAJ3-only FA
+                    candidates.append((3, n3, None))
+                if prof.max_maj_fan_in >= 5:
+                    for n5 in pows:
+                        for n3 in pows:
+                            if n5 >= 5:
+                                candidates.append((5, n5, n3))
+            else:
+                m = 3
+                while m <= min(prof.max_maj_fan_in, cap):
+                    for n in pows:
+                        if n >= m:
+                            candidates.append((m, n, None))
+                    m += 2
+            best = None
+            for m, n, n3 in candidates:
+                sr = sr_of(m, n)
+                if n3 is not None:
+                    sr = min(sr, sr_of(3, n3))
+                if sr <= 1e-3:
+                    continue
+                cost = self._kind_cost(kind, m, n, w, n_planes, n3)
+                eff = cost.latency_ns / sr
+                if best is None or eff < best[0]:
+                    best = (eff, m, n, sr, cost)
+            assert best is not None, f"no viable config for {kind}"
+            self._best_cfg_cache[key] = best[1:]
+        return self._best_cfg_cache[key]
+
+    def _n_vec_rows(self, n_elems: int) -> int:
+        return -(-n_elems // self.row_bits)
+
+    def _charge(self, kind: str, n_elems: int, width: int | None = None,
+                n_planes: int | None = None) -> None:
+        w = width or self.width
+        _m, _n, sr, cost = self._cfg_for(kind, w, n_planes)
+        self.stats.charge(cost, self._n_vec_rows(n_elems), self.banks, sr)
+
+    # ------------------------------------------------------------------ #
+    # Dataplane ops (fast backend: NumPy; sim backend: chip model)
+    # ------------------------------------------------------------------ #
+
+    def _mask(self, w: int) -> np.uint64:
+        return np.uint64((1 << w) - 1)
+
+    def and_(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("and2", a.size)
+        return self._run2("and", a, b, lambda x, y: x & y)
+
+    def or_(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("or2", a.size)
+        return self._run2("or", a, b, lambda x, y: x | y)
+
+    def xor(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("xor2", a.size)
+        return self._run2("xor", a, b, lambda x, y: x ^ y)
+
+    def add(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("add", a.size)
+        return self._run2("add", a, b,
+                          lambda x, y: (x + y) & self._mask(self.width))
+
+    def sub(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("add", a.size)
+        return self._run2("sub", a, b,
+                          lambda x, y: (x - y) & self._mask(self.width))
+
+    def mul(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("mul", a.size)
+        return self._run2("mul", a, b,
+                          lambda x, y: (x * y) & self._mask(self.width))
+
+    def div(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("div", a.size)
+        return self._run2("div", a, b, lambda x, y: x // y)
+
+    def less_than(self, a, b):
+        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        self._charge("compare", a.size)
+        return (a < b).astype(np.uint64)
+
+    def popcount(self, a, width: int | None = None):
+        a = np.asarray(a, np.uint64)
+        w = width or self.width
+        self._charge("popcount", a.size, n_planes=w)
+        return np.array([bin(int(x)).count("1") for x in a.ravel()],
+                        np.uint64).reshape(a.shape) if a.size < 4096 else \
+            _vec_popcount(a)
+
+    def reduce_bits(self, a, kind: str, width: int | None = None):
+        """Per-element AND/OR/XOR reduction across the element's bits."""
+        a = np.asarray(a, np.uint64)
+        w = width or self.width
+        self._charge(f"reduce_{kind}", a.size, n_planes=w)
+        if kind == "and":
+            return (a == self._mask(w)).astype(np.uint64)
+        if kind == "or":
+            return (a != 0).astype(np.uint64)
+        pc = _vec_popcount(a)
+        return pc & np.uint64(1)
+
+    def _run2(self, name, a, b, np_fn):
+        if self.backend == "sim" and a.size <= self._alu.words * 32:
+            alu = self._alu
+            va, vb = alu.load(a.ravel()[: alu.words * 32]), None
+            vb = alu.load(b.ravel()[: alu.words * 32])
+            fn = {"and": alu.and_, "or": alu.or_, "xor": alu.xor,
+                  "add": alu.add, "sub": alu.sub, "mul": alu.mul}.get(name)
+            if fn is None and name == "div":
+                q, r = alu.div(va, vb)
+                out = alu.store(q)
+            else:
+                out = alu.store(fn(va, vb))
+            return out[: a.size].reshape(a.shape)
+        return np_fn(a, b)
+
+    # ------------------------------------------------------------------ #
+
+    @property
+    def latency_ms(self) -> float:
+        return self.stats.latency_ns * 1e-6
+
+    def reset_stats(self) -> None:
+        self.stats = EngineStats()
+
+
+def _vec_popcount(a: np.ndarray) -> np.ndarray:
+    a = a.astype(np.uint64)
+    out = np.zeros_like(a)
+    while a.any():
+        out += a & np.uint64(1)
+        a = a >> np.uint64(1)
+    return out

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: 32x32 bit-matrix transpose (layout conversion).
+
+Horizontal (one uint32 word per element) <-> vertical (bit-planes along the
+"bitline"/lane axis) conversion is the staging hot-spot of every bit-serial
+PuM framework (§2.4). On TPU we keep tiles in VMEM and run the Hacker's
+Delight masked-swap network on the 32 sublane rows; the G tile axis maps to
+VPU lanes, so all tiles transpose in parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE = 128
+G_BLOCK = LANE  # tiles per grid step (one lane row)
+
+
+def _transpose_kernel(x_ref, o_ref):
+    # Reversed load/store order converts the HD bit-reversed transpose to
+    # LSB-first semantics (see ref.bit_transpose32).
+    rows = [x_ref[31 - k] for k in range(32)]
+    m = 0x0000FFFF
+    j = 16
+    while j != 0:
+        mask = jnp.array(np.int32(np.uint32(m)), jnp.int32)
+        shift = jnp.array(j, jnp.int32)
+        k = 0
+        while k < 32:
+            t = (rows[k] ^ jax.lax.shift_right_logical(rows[k + j], shift)) & mask
+            rows[k] = rows[k] ^ t
+            rows[k + j] = rows[k + j] ^ (t << shift)
+            k = (k + j + 1) & ~j
+        j >>= 1
+        if j:
+            m = (m ^ (m << j)) & 0xFFFFFFFF
+    for k in range(32):
+        o_ref[k] = rows[31 - k]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bit_transpose32(x: jax.Array, interpret: bool = False) -> jax.Array:
+    """x: [32, G] int32 (row k = word k of G tiles) -> [32, G] transposed."""
+    if x.shape[0] != 32:
+        raise ValueError("leading dim must be 32")
+    g = x.shape[1]
+    pad = (-g) % (8 * LANE)
+    xp = jnp.pad(x, ((0, 0), (0, pad))).astype(jnp.int32)
+    gp = xp.shape[1]
+    blocks = gp // (8 * LANE)
+    xb = xp.reshape(32, blocks, 8, LANE)
+    out = pl.pallas_call(
+        _transpose_kernel,
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((32, 1, 8, LANE), lambda i: (0, i, 0, 0))],
+        out_specs=pl.BlockSpec((32, 1, 8, LANE), lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((32, blocks, 8, LANE), jnp.int32),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(32, gp)[:, :g].astype(x.dtype)

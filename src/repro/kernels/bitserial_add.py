@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: vertical-layout bit-serial ripple add.
+
+Fuses the PuM full-adder loop (alu.py) over all ``width`` bit-planes into a
+single VMEM-resident pass: the carry lives in registers instead of being
+written back per plane (on DRAM each carry costs 2-6 row activations; on TPU
+it is free — this asymmetry is a §Perf observation in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+BLOCK_WORDS = SUBLANE * LANE
+
+
+def _add_kernel(a_ref, b_ref, o_ref, *, width: int):
+    carry = jnp.zeros(a_ref.shape[1:], jnp.int32)
+    for j in range(width):  # static unroll (width <= 64)
+        a, b = a_ref[j], b_ref[j]
+        axb = a ^ b
+        o_ref[j] = axb ^ carry
+        carry = (a & b) | (carry & axb)  # carry = MAJ3(a, b, carry)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitserial_add(a: jax.Array, b: jax.Array,
+                  interpret: bool = False) -> jax.Array:
+    """a, b: [width, W] int32 bit-planes -> [width, W] sum planes."""
+    if a.shape != b.shape:
+        raise ValueError("shape mismatch")
+    width, w = a.shape
+    pad = (-w) % BLOCK_WORDS
+    ap = jnp.pad(a, ((0, 0), (0, pad))).astype(jnp.int32)
+    bp = jnp.pad(b, ((0, 0), (0, pad))).astype(jnp.int32)
+    blocks = ap.shape[1] // BLOCK_WORDS
+    ab = ap.reshape(width, blocks, SUBLANE, LANE)
+    bb = bp.reshape(width, blocks, SUBLANE, LANE)
+    spec = pl.BlockSpec((width, 1, SUBLANE, LANE), lambda i: (0, i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_add_kernel, width=width),
+        grid=(blocks,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((width, 1, SUBLANE, LANE),
+                               lambda i: (0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((width, blocks, SUBLANE, LANE),
+                                       jnp.int32),
+        interpret=interpret,
+    )(ab, bb)
+    return out.reshape(width, blocks * BLOCK_WORDS)[:, :w].astype(a.dtype)

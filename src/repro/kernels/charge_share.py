@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: charge-sharing Monte-Carlo inner loop.
+
+The analog success-rate characterization (analog.py, Figs 4/11/14-16) is a
+large batched computation: deviation = sum_i C_i (V_i - VDD/2) / (C_bl +
+sum_i C_i) over [n_rows, n_bitlines] fields, repeated over patterns and
+Monte-Carlo groups. This kernel fuses the row reduction in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+SUBLANE = 8
+BLOCK = SUBLANE * LANE
+
+
+def _cs_kernel(v_ref, c_ref, o_ref, *, n: int, vdd: float, c_bl: float):
+    num = jnp.zeros(v_ref.shape[1:], jnp.float32)
+    den = jnp.full(v_ref.shape[1:], c_bl, jnp.float32)
+    for i in range(n):  # static unroll: n <= 32 rows
+        c = c_ref[i]
+        num = num + c * (v_ref[i] - 0.5 * vdd)
+        den = den + c
+    o_ref[...] = num / den
+
+
+@functools.partial(jax.jit, static_argnames=("vdd", "c_bl", "interpret"))
+def charge_share(v: jax.Array, caps: jax.Array, *, vdd: float, c_bl: float,
+                 interpret: bool = False) -> jax.Array:
+    """v, caps: [N, B] float32 -> dV [B] float32."""
+    if v.shape != caps.shape:
+        raise ValueError("shape mismatch")
+    n, b = v.shape
+    pad = (-b) % BLOCK
+    vp = jnp.pad(v, ((0, 0), (0, pad))).astype(jnp.float32)
+    cp = jnp.pad(caps, ((0, 0), (0, pad))).astype(jnp.float32)
+    blocks = vp.shape[1] // BLOCK
+    vb = vp.reshape(n, blocks, SUBLANE, LANE)
+    cb = cp.reshape(n, blocks, SUBLANE, LANE)
+    spec = pl.BlockSpec((n, 1, SUBLANE, LANE), lambda i: (0, i, 0, 0))
+    out = pl.pallas_call(
+        functools.partial(_cs_kernel, n=n, vdd=vdd, c_bl=c_bl),
+        grid=(blocks,),
+        in_specs=[spec, spec],
+        out_specs=pl.BlockSpec((1, SUBLANE, LANE), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((blocks, SUBLANE, LANE), jnp.float32),
+        interpret=interpret,
+    )(vb, cb)
+    return out.reshape(blocks * BLOCK)[:b]

@@ -1,0 +1,49 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the Pallas path runs natively; on CPU (this container) the wrappers
+dispatch to the jnp oracle by default — Pallas interpret mode executes the
+kernel body in Python per grid step and is for validation, not speed. Tests
+exercise interpret=True explicitly (tests/kernels/).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
+from repro.kernels.bitserial_add import bitserial_add as _pl_add
+from repro.kernels.charge_share import charge_share as _pl_cs
+from repro.kernels.maj_n import maj_n as _pl_maj
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def maj_n(x, threshold: int, force_pallas: bool = False,
+          interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pl_maj(x, threshold, interpret=interpret or not _on_tpu())
+    # CPU: the bit-sliced form beats the unpack-sum oracle ~20x (§Perf K0).
+    return ref.maj_n_fast(x, threshold)
+
+
+def bitserial_add(a, b, force_pallas: bool = False, interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pl_add(a, b, interpret=interpret or not _on_tpu())
+    return ref.bitserial_add(a, b)
+
+
+def bit_transpose32(x, force_pallas: bool = False, interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pl_transpose(x, interpret=interpret or not _on_tpu())
+    return ref.bit_transpose32(x)
+
+
+def charge_share(v, caps, *, vdd: float, c_bl: float,
+                 force_pallas: bool = False, interpret: bool = False):
+    if _on_tpu() or force_pallas:
+        return _pl_cs(v, caps, vdd=vdd, c_bl=c_bl,
+                      interpret=interpret or not _on_tpu())
+    return ref.charge_share(v, caps, vdd=vdd, c_bl=c_bl)

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (single source of truth for
+semantics; kernels are validated against these across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def maj_n(x: jax.Array, threshold: int) -> jax.Array:
+    """Packed-word majority: out bit = (popcount over N rows >= threshold).
+
+    x: [N, W] int32/uint32 bit-planes. Returns [W] of x.dtype.
+
+    This is the TPU-native form of PULSAR's many-input charge sharing
+    (§5.2.2): one pass over N operand planes produces the MAJ-N plane.
+    """
+    n, _ = x.shape
+    if not (1 <= threshold <= n):
+        raise ValueError(f"threshold {threshold} not in [1,{n}]")
+    bits = jnp.stack([(jax.lax.shift_right_logical(x, jnp.array(b, x.dtype))
+                       & jnp.array(1, x.dtype)) for b in range(32)])
+    counts = bits.sum(axis=1)  # [32, W] per-bit vote counts
+    maj = (counts >= threshold).astype(x.dtype)
+    out = jnp.zeros_like(x[0])
+    for b in range(32):
+        out = out | (maj[b] << jnp.array(b, x.dtype))
+    return out
+
+
+def maj_n_fast(x: jax.Array, threshold: int) -> jax.Array:
+    """Bit-sliced carry-save implementation of maj_n (the Pallas kernel's
+    algorithm, in jnp): K counter planes + overflow trick — ~6N int32 ops
+    per word instead of the oracle's 32x bit-unpack (§Perf K0).
+    Semantics identical to maj_n (validated in tests)."""
+    n, w = x.shape
+    if not (1 <= threshold <= n):
+        raise ValueError(f"threshold {threshold} not in [1,{n}]")
+    k = max(1, int(n).bit_length())
+    init = (1 << k) - threshold
+    planes = [jnp.full((w,), -1, jnp.int32) if (init >> j) & 1
+              else jnp.zeros((w,), jnp.int32) for j in range(k)]
+    overflow = jnp.zeros((w,), jnp.int32)
+    xi = x.astype(jnp.int32)
+    for i in range(n):
+        carry = xi[i]
+        for j in range(k):
+            t = planes[j] ^ carry
+            carry = planes[j] & carry
+            planes[j] = t
+        overflow = overflow | carry
+    return overflow.astype(x.dtype)
+
+
+def bitserial_add(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Vertical-layout ripple add: a, b: [width, W] bit-planes -> [width, W].
+
+    Carry chain runs across planes: the PuM full-adder loop (alu.py) fused
+    into one pass (carry = MAJ3(a,b,c), the paper's own carry identity)."""
+    w = a.shape[0]
+    outs = []
+    carry = jnp.zeros_like(a[0])
+    for j in range(w):
+        s = a[j] ^ b[j] ^ carry
+        carry = (a[j] & b[j]) | (carry & (a[j] ^ b[j]))
+        outs.append(s)
+    return jnp.stack(outs)
+
+
+def bit_transpose32(x: jax.Array) -> jax.Array:
+    """32x32 bit-matrix transpose (horizontal <-> vertical layout).
+
+    x: [32, G] int32 — row k holds word k of G independent 32x32 tiles.
+    Returns [32, G]: out[j] bit i == x[i] bit j (per tile).
+    Hacker's Delight masked-swap network; the HD form transposes with both
+    axes bit-reversed, so rows are loaded and stored in reversed order to
+    obtain LSB-first semantics (index games only — no extra data movement).
+    """
+    rows = [x[31 - k] for k in range(32)]
+    m = 0x0000FFFF
+    j = 16
+    while j != 0:
+        k = 0
+        while k < 32:
+            mask = jnp.array(np.int32(np.uint32(m)), x.dtype)
+            t = (rows[k] ^ jax.lax.shift_right_logical(
+                rows[k + j], jnp.array(j, x.dtype))) & mask
+            rows[k] = rows[k] ^ t
+            rows[k + j] = rows[k + j] ^ (t << jnp.array(j, x.dtype))
+            k = (k + j + 1) & ~j
+        j >>= 1
+        m = (m ^ (m << j)) & 0xFFFFFFFF if j else m
+    return jnp.stack(rows[::-1])
+
+
+def charge_share(v: jax.Array, caps: jax.Array, *, vdd: float,
+                 c_bl: float) -> jax.Array:
+    """Bitline deviation: v, caps [N, B] -> dV [B] (analog.py's core)."""
+    num = jnp.sum(caps * (v - 0.5 * vdd), axis=0)
+    den = c_bl + jnp.sum(caps, axis=0)
+    return num / den
+
+
+def multi_row_broadcast(src: jax.Array, n: int) -> jax.Array:
+    """Multi-RowInit dataplane: one row plane -> n identical planes."""
+    return jnp.broadcast_to(src[None], (n,) + src.shape)

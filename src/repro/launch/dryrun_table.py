@@ -1,0 +1,51 @@
+"""Render the EXPERIMENTS.md §Dry-run table from sweep JSONL records."""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.1f} {unit}"
+    return f"{x:.0f} B"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("records", nargs="+")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    rows = []
+    for path in args.records:
+        with open(path) as f:
+            rows.extend(json.loads(l) for l in f)
+    lines = [
+        "| arch | shape | mesh | compile | args/dev | temp/dev | "
+        "HLO GFLOP/dev | collective/dev | status |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                         f"| - | - | - | - | - | FAIL: {r['error'][:40]} |")
+            continue
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['lower_compile_s']:.0f}s "
+            f"| {fmt_b(m['argument_size_in_bytes'])} "
+            f"| {fmt_b(m['temp_size_in_bytes'])} "
+            f"| {r['flops']/1e9:.1f} "
+            f"| {fmt_b(r['collectives']['total_weighted'])} | ok |")
+    md = "\n".join(lines)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md + "\n")
+
+
+if __name__ == "__main__":
+    main()

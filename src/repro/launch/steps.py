@@ -1,0 +1,210 @@
+"""Step builders + shape-only input specs for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins (no
+device allocation); ``build_cell`` returns the jit-able step function plus
+the full argument spec/sharding pytrees — shared by the multi-pod dry-run,
+the roofline analysis, and (with real arrays) the train/serve drivers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import (ModelConfig, ShapeConfig, TrainConfig,
+                               get_config)
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        param_shardings, replicated)
+from repro.models.model import (decode_step, init_cache, init_params, prefill)
+from repro.train.optimizer import adamw_init
+from repro.train.trainer import build_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds(shape, dtype):
+    return SDS(tuple(shape), jnp.dtype(dtype))
+
+
+# ----------------------------------------------------------------------- #
+# Input specs per cell
+# ----------------------------------------------------------------------- #
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Training/prefill batch stand-ins. For enc-dec, the seq budget splits
+    between source frames and target tokens; for VLM, patch tokens come out
+    of the text budget (DESIGN.md shape notes)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.encoder_decoder:
+            half = s // 2
+            return {"frames": _sds((b, half, cfg.d_model), "float32"),
+                    "tokens": _sds((b, half + 1), "int32")}
+        if cfg.frontend == "vision":
+            n_txt = s - cfg.n_frontend_tokens
+            return {"patches": _sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                                    "float32"),
+                    "tokens": _sds((b, n_txt + 1), "int32")}
+        return {"tokens": _sds((b, s + 1), "int32")}
+    # prefill
+    if cfg.encoder_decoder:
+        return {"frames": _sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                               "float32"),
+                "tokens": _sds((b, s), "int32")}
+    if cfg.frontend == "vision":
+        return {"patches": _sds((b, cfg.n_frontend_tokens, cfg.d_model),
+                                "float32"),
+                "tokens": _sds((b, s - cfg.n_frontend_tokens), "int32")}
+    return {"tokens": _sds((b, s), "int32")}
+
+
+def params_specs(cfg: ModelConfig, dtype: str | None = None) -> Any:
+    tree = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    if dtype is None:
+        return tree
+    dt = jnp.dtype(dtype)
+
+    def cast(x):
+        return SDS(x.shape, dt) if jnp.issubdtype(x.dtype, jnp.floating) \
+            else x
+    return jax.tree.map(cast, tree)
+
+
+def opt_specs(params_tree: Any) -> Any:
+    return jax.eval_shape(adamw_init, params_tree)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    b, s = shape.global_batch, shape.seq_len
+    return jax.eval_shape(
+        lambda: init_cache(cfg, b, s, jnp.bfloat16))
+
+
+def input_specs(arch: str, shape: ShapeConfig) -> dict:
+    """Public stand-in API (deliverable e.2): every model input as a
+    ShapeDtypeStruct, keyed by argument name."""
+    cfg = get_config(arch)
+    if shape.kind == "train":
+        params = params_specs(cfg)
+        return {"params": params, "opt_state": opt_specs(params),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params_specs(cfg, "bfloat16"),
+                "batch": batch_specs(cfg, shape)}
+    spec = {"params": params_specs(cfg, "bfloat16"),
+            "caches": cache_specs(cfg, shape),
+            "token": _sds((shape.global_batch,), "int32"),
+            "pos": _sds((shape.global_batch,), "int32")}
+    if cfg.encoder_decoder:
+        spec["memory"] = _sds((shape.global_batch, cfg.n_frontend_tokens,
+                               cfg.d_model), "bfloat16")
+    return spec
+
+
+# ----------------------------------------------------------------------- #
+# Cell = (fn, arg specs, in_shardings, out_shardings, donate)
+# ----------------------------------------------------------------------- #
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*self.args)
+
+
+def build_cell(arch: str, shape: ShapeConfig, mesh: Mesh,
+               tcfg: TrainConfig | None = None,
+               overrides: dict | None = None) -> Cell:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    tcfg = tcfg or TrainConfig()
+    # Memory-tier rule for training (§Perf P1/H2):
+    #   small: params+moments replicated over data (pure TP+DP),
+    #   medium (moments don't fit TP-only): ZeRO-2-style — params TP-only,
+    #     moments FSDP over data (grads reduce-scatter + params re-gather,
+    #     same wire bytes as the plain all-reduce; NO per-layer weight
+    #     gathers in fwd/bwd),
+    #   huge (params alone don't fit TP-only): full ZeRO-3 FSDP.
+    param_fsdp = cfg.param_count() * 4 / 16 > 10e9
+    opt_fsdp = param_fsdp or cfg.param_count() * 12 / 16 > 12e9
+    if shape.kind == "train":
+        params = params_specs(cfg)
+        opt = opt_specs(params)
+        batch = batch_specs(cfg, shape)
+        p_sh = param_shardings(cfg, mesh, params, fsdp=param_fsdp)
+        o_sh = {"mu": param_shardings(cfg, mesh, opt["mu"], fsdp=opt_fsdp),
+                "nu": param_shardings(cfg, mesh, opt["nu"], fsdp=opt_fsdp),
+                "step": NamedSharding(mesh, P())}
+        b_sh = batch_shardings(mesh, batch)
+        fn = build_train_step(cfg, tcfg)
+        return Cell(arch, shape, fn, (params, opt, batch),
+                    (p_sh, o_sh, b_sh), (p_sh, o_sh, None),
+                    donate_argnums=(0, 1))
+    # Serving: TP-only weights (latency path) unless the bf16 TP shard
+    # exceeds HBM (deepseek-v2-class -> FSDP-gathered weights); SMALL models
+    # (<4 GB bf16) instead replicate weights and run sequence-parallel on
+    # the model axis — no per-layer FFN all-reduce at all (§Perf H1.2).
+    pbytes = cfg.param_count() * 2
+    serve_fsdp = pbytes / 16 > 12e9
+    serve_sp = pbytes <= 4e9
+    if serve_sp and shape.kind in ("prefill", "decode"):
+        cfg = dataclasses.replace(cfg, serve_seq_parallel=True)
+    if shape.kind == "prefill":
+        params = params_specs(cfg, "bfloat16")
+        batch = batch_specs(cfg, shape)
+        p_sh = param_shardings(cfg, mesh, params, fsdp=serve_fsdp,
+                               tp=not serve_sp)
+        b_sh = batch_shardings(mesh, batch)
+        caches = cache_specs(cfg, shape)
+        c_sh = cache_shardings(cfg, mesh, caches)
+
+        def prefill_fn(p, b):
+            logits, caches_out, memory = prefill(cfg, p, b, shape.seq_len)
+            return logits, caches_out, memory
+
+        mem_sh = None
+        return Cell(arch, shape, prefill_fn, (params, batch),
+                    (p_sh, b_sh), (None, c_sh, mem_sh), donate_argnums=())
+    # decode
+    params = params_specs(cfg, "bfloat16")
+    caches = cache_specs(cfg, shape)
+    p_sh = param_shardings(cfg, mesh, params, fsdp=serve_fsdp,
+                           tp=not serve_sp)
+    c_sh = cache_shardings(cfg, mesh, caches)
+    tok = _sds((shape.global_batch,), "int32")
+    pos = _sds((shape.global_batch,), "int32")
+    t_sh = batch_shardings(mesh, tok)
+    args: tuple = (params, caches, tok, pos)
+    in_sh: tuple = (p_sh, c_sh, t_sh, t_sh)
+    if cfg.encoder_decoder:
+        mem = _sds((shape.global_batch, cfg.n_frontend_tokens, cfg.d_model),
+                   "bfloat16")
+        m_sh = batch_shardings(mesh, mem)
+
+        def decode_fn(p, c, t, q, memory):
+            return decode_step(cfg, p, c, t, q, memory=memory)
+
+        args = args + (mem,)
+        in_sh = in_sh + (m_sh,)
+    else:
+        def decode_fn(p, c, t, q):
+            return decode_step(cfg, p, c, t, q)
+
+    return Cell(arch, shape, decode_fn, args, in_sh, (None, c_sh),
+                donate_argnums=(1,))

@@ -1,0 +1,220 @@
+"""GQA attention (QKV bias, QK-norm, sliding window) with KV-cache decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def gqa_params(key: jax.Array, cfg) -> dict:
+    d, h, hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+    dh = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h, dh), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, hkv, dh), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, hkv, dh), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (h, dh, d), jnp.float32) / np.sqrt(h * dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), jnp.float32)
+        p["bk"] = jnp.zeros((hkv, dh), jnp.float32)
+        p["bv"] = jnp.zeros((hkv, dh), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg, p: dict, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(t: int, s: int, causal: bool, window,
+          q_offset: int = 0) -> jax.Array:
+    """[t, s] additive mask; query i is at absolute position q_offset + i.
+    ``window`` may be a traced scalar (per-layer SWA schedule under scan);
+    window <= 0 means full attention."""
+    qpos = jnp.arange(t)[:, None] + q_offset
+    kpos = jnp.arange(s)[None, :]
+    ok = jnp.ones((t, s), bool)
+    if causal:
+        ok = ok & (kpos <= qpos)
+    window = jnp.asarray(window)
+    ok = ok & ((window <= 0) | (kpos > qpos - window))
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# KV sequence lengths at or above this use the chunked (flash-style) path:
+# full [T, S] logits for 32k x 32k would be tens of GB per device.
+CHUNKED_SDPA_THRESHOLD = 8192
+KV_BLOCK = 1024
+
+
+def _sdpa_dense(q, k, v, mask):
+    """q:[B,T,H,dh] k,v:[B,S,Hkv,dh]; grouped heads; fp32 softmax."""
+    b, t, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    q = q.reshape(b, t, hkv, g, dh)
+    logits = jnp.einsum("bthgk,bshk->bhgts", q, k) / np.sqrt(dh)
+    logits = logits.astype(jnp.float32) + mask
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgts,bshk->bthgk", probs, v)
+    return out.reshape(b, t, h, dh)
+
+
+def _sdpa_chunked(q, k, v, causal: bool, window, q_offset: int = 0,
+                  kv_block: int = KV_BLOCK):
+    """Flash-style online-softmax attention: lax.scan over KV blocks.
+
+    Never materializes the [T, S] logits — peak extra memory is one
+    [B, Hkv, G, T, kv_block] block. This is what makes the 32k-prefill
+    cells fit (see EXPERIMENTS.md §Dry-run)."""
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    if s % kv_block:
+        pad = kv_block - s % kv_block
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s_pad = s + pad
+    else:
+        s_pad = s
+    nb = s_pad // kv_block
+    qr = (q.reshape(b, t, hkv, g, dh) / np.sqrt(dh)).astype(q.dtype)
+    kb = k.reshape(b, nb, kv_block, hkv, dh)
+    vb = v.reshape(b, nb, kv_block, hkv, dh)
+    qpos = jnp.arange(t) + q_offset
+    window = jnp.asarray(window)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        k_blk, v_blk, start = blk
+        logits = jnp.einsum("bthgk,bshk->bhgts", qr, k_blk
+                            ).astype(jnp.float32)
+        kpos = start + jnp.arange(kv_block)
+        ok = kpos[None, :] < s  # padding
+        if causal:
+            ok = ok & (kpos[None, :] <= qpos[:, None])
+        ok = ok & ((window <= 0) | (kpos[None, :] > qpos[:, None] - window))
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+        m_blk = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(logits - m_new[..., None])
+        scale = jnp.exp(m_prev - m_new)
+        l_new = l_prev * scale + p.sum(-1)
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bhgts,bshk->bhgtk", p.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, t), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, t, dh), jnp.float32)
+    starts = jnp.arange(nb) * kv_block
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), starts))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(out, 3, 1)           # [B,T,Hkv,G,dh]
+    return out.reshape(b, t, h, dh).astype(q.dtype)
+
+
+def _sdpa(q, k, v, mask):
+    return _sdpa_dense(q, k, v, mask)
+
+
+def attention(cfg, p: dict, x: jax.Array, positions: jax.Array,
+              causal: bool = True, window: int | None = None,
+              kv: tuple[jax.Array, jax.Array] | None = None) -> jax.Array:
+    """Full-sequence attention (train / encoder / prefill compute).
+
+    ``kv``: cross-attention memory (enc-dec) — overrides self K/V.
+    """
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if kv is not None:
+        k, v = kv
+        if k.shape[1] >= CHUNKED_SDPA_THRESHOLD:
+            out = _sdpa_chunked(q, k, v, causal=False, window=0)
+        else:
+            mask = jnp.zeros((q.shape[1], k.shape[1]), jnp.float32)
+            out = _sdpa(q, k, v, mask)
+    else:
+        w = cfg.sliding_window if window is None else window
+        if k.shape[1] >= CHUNKED_SDPA_THRESHOLD:
+            out = _sdpa_chunked(q, k, v, causal=causal, window=w)
+        else:
+            out = _sdpa(q, k, v, _mask(q.shape[1], k.shape[1], causal, w))
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+def attention_prefill(cfg, p: dict, x: jax.Array, positions: jax.Array,
+                      window: int | None = None):
+    """Returns (out, (k_cache, v_cache)) for serving prefill."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    if cfg.serve_seq_parallel:
+        # SP serving: q stays sequence-sharded; K/V gather across the model
+        # axis (the one collective of the scheme — §Perf H1.2).
+        from repro.distributed.constraints import maybe_shard
+        k = maybe_shard(k, ("pod", "data"), None, None, None)
+        v = maybe_shard(v, ("pod", "data"), None, None, None)
+    w = cfg.sliding_window if window is None else window
+    if k.shape[1] >= CHUNKED_SDPA_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, causal=True, window=w)
+    else:
+        out = _sdpa(q, k, v, _mask(q.shape[1], k.shape[1], True, w))
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype)), (k, v)
+
+
+def attention_decode(cfg, p: dict, x: jax.Array, pos: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array,
+                     window: int | None = None):
+    """One-token decode. x: [B, 1, D]; pos: [B] current absolute position;
+    cache_k/v: [B, C, Hkv, dh], ring-buffered (C = full seq for global
+    layers, C = window for SWA layers). Returns (out [B,1,D], new_k, new_v).
+    """
+    b, _, d = x.shape
+    q, k, v = _project_qkv(cfg, p, x, pos[:, None])
+    c = cache_k.shape[1]
+    idx = pos % c
+    cache_k = cache_k.at[jnp.arange(b), idx].set(k[:, 0])
+    cache_v = cache_v.at[jnp.arange(b), idx].set(v[:, 0])
+    w = cfg.sliding_window if window is None else window
+    kpos = jnp.arange(c)[None, :]
+    # Absolute position held by ring slot i: pos - ((pos - i) mod C).
+    slot_pos = pos[:, None] - ((pos[:, None] - kpos) % c)
+    ok = slot_pos >= 0
+    if w and w > 0:
+        ok = ok & (slot_pos > pos[:, None] - w)
+    mask = jnp.where(ok, 0.0, NEG_INF)[:, None, None, None, :]  # b h g t s
+    hkv = cache_k.shape[2]
+    g = cfg.n_heads // hkv
+    dh = cfg.resolved_head_dim
+    qr = q.reshape(b, 1, hkv, g, dh)
+    logits = jnp.einsum("bthgk,bshk->bhgts", qr, cache_k) / np.sqrt(dh)
+    logits = logits.astype(jnp.float32) + mask
+    probs = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bhgts,bshk->bthgk", probs, cache_v).reshape(b, 1,
+                                                                  cfg.n_heads, dh)
+    out = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return out, cache_k, cache_v

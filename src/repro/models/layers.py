@@ -1,0 +1,105 @@
+"""Shared neural layers: norms, RoPE, MLPs, embeddings (pure JAX)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * scale.astype(dt) + bias.astype(dt)
+
+
+def apply_norm(cfg, x: jax.Array, p: dict) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_params(cfg, dim: int) -> dict:
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+# ----------------------------------------------------------------------- #
+# RoPE
+# ----------------------------------------------------------------------- #
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: [..., T, H, Dh]; positions: [..., T] int32."""
+    dh = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(dh, theta), jnp.float32)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- #
+# MLP
+# ----------------------------------------------------------------------- #
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU MLP: (silu(x @ w_gate) * (x @ w_up)) @ w_down."""
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"].astype(x.dtype))
+
+
+def swiglu_params(key: jax.Array, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), jnp.float32) * s_in,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), jnp.float32) * s_in,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), jnp.float32) * s_out,
+    }
+
+
+# ----------------------------------------------------------------------- #
+# Embedding / unembedding
+# ----------------------------------------------------------------------- #
+
+def embed_params(key: jax.Array, padded_vocab: int, d_model: int,
+                 tie: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": jax.random.normal(
+        k1, (padded_vocab, d_model), jnp.float32) * 0.02}
+    if not tie:
+        p["unembed"] = jax.random.normal(
+            k2, (padded_vocab, d_model), jnp.float32) * 0.02
+    return p
+
+
+def embed(tokens: jax.Array, p: dict, dtype) -> jax.Array:
+    return p["embedding"].astype(dtype)[tokens]
+
+
+def unembed(x: jax.Array, p: dict) -> jax.Array:
+    w = p.get("unembed", p["embedding"])
+    return jnp.einsum("...d,vd->...v", x, w.astype(x.dtype))

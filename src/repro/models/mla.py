@@ -1,0 +1,197 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a ``kv_lora_rank`` latent c_kv plus one shared RoPE
+key head; queries go through their own low-rank path. Train/prefill
+decompress to per-head K/V; decode uses the ABSORBED form — scores and
+values are computed directly against the cached latent:
+
+    score[t,h] = (q_nope[h] @ W_uk[h]^T) . c_kv[t]  +  q_rope[h] . k_rope[t]
+    out[h]     = (sum_t p[t,h] c_kv[t]) @ W_uv[h]
+
+so the decode cache is [T, kv_lora + rope_dim] (= 576 for DS-V2) instead of
+[T, 2*H*dh] (= 65536) — a 113x cache reduction; this is also the §Perf lever
+for the deepseek decode cells.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def mla_params(key: jax.Array, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    dq, dkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "w_dq": jax.random.normal(ks[0], (d, dq), jnp.float32) * s,
+        "q_norm": jnp.ones((dq,), jnp.float32),
+        "w_uq": jax.random.normal(ks[1], (dq, h, dn + dr), jnp.float32)
+                / np.sqrt(dq),
+        "w_dkv": jax.random.normal(ks[2], (d, dkv), jnp.float32) * s,
+        "kv_norm": jnp.ones((dkv,), jnp.float32),
+        "w_kr": jax.random.normal(ks[3], (d, dr), jnp.float32) * s,
+        "w_uk": jax.random.normal(ks[4], (dkv, h, dn), jnp.float32)
+                / np.sqrt(dkv),
+        "w_uv": jax.random.normal(ks[5], (dkv, h, dv), jnp.float32)
+                / np.sqrt(dkv),
+        "wo": jax.random.normal(ks[6], (h, dv, d), jnp.float32)
+              / np.sqrt(h * dv),
+    }
+    return p
+
+
+def _q_proj(cfg, p, x, positions):
+    cq = rms_norm(jnp.einsum("btd,dr->btr", x, p["w_dq"].astype(x.dtype)),
+                  p["q_norm"])
+    q = jnp.einsum("btr,rhk->bthk", cq, p["w_uq"].astype(x.dtype))
+    dn = cfg.qk_nope_head_dim
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _kv_latent(cfg, p, x, positions):
+    c_kv = rms_norm(jnp.einsum("btd,dr->btr", x, p["w_dkv"].astype(x.dtype)),
+                    p["kv_norm"])
+    k_rope = jnp.einsum("btd,dr->btr", x, p["w_kr"].astype(x.dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+CHUNKED_THRESHOLD = 8192
+KV_BLOCK = 1024
+
+
+def _mla_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope, kv_block=KV_BLOCK):
+    """Flash-style online softmax over latent KV blocks; K/V decompress
+    happens PER BLOCK inside the scan, so neither the [T,S] logits nor the
+    full decompressed K/V ([B,S,H,dh] — 128 heads!) ever materialize."""
+    b, t, h, dn = q_nope.shape
+    s = c_kv.shape[1]
+    scale = 1.0 / np.sqrt(dn + cfg.qk_rope_head_dim)
+    dv = cfg.v_head_dim
+    if s % kv_block:
+        pad = kv_block - s % kv_block
+        c_kv = jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    nb = c_kv.shape[1] // kv_block
+    cb = jnp.moveaxis(c_kv.reshape(b, nb, kv_block, -1), 1, 0)
+    rb = jnp.moveaxis(k_rope.reshape(b, nb, kv_block, -1), 1, 0)
+    starts = jnp.arange(nb) * kv_block
+    qn = (q_nope * scale).astype(q_nope.dtype)
+    qr = (q_rope * scale).astype(q_rope.dtype)
+    qpos = jnp.arange(t)
+
+    def body(carry, blk):
+        m_prev, l_prev, acc = carry
+        c_blk, r_blk, start = blk
+        k_nope = jnp.einsum("bsr,rhk->bshk", c_blk,
+                            p["w_uk"].astype(c_blk.dtype))
+        v_blk = jnp.einsum("bsr,rhk->bshk", c_blk,
+                           p["w_uv"].astype(c_blk.dtype))
+        logits = (jnp.einsum("bthk,bshk->bhts", qn, k_nope)
+                  + jnp.einsum("bthk,bsk->bhts", qr, r_blk)
+                  ).astype(jnp.float32)
+        kpos = start + jnp.arange(kv_block)
+        ok = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] < s)
+        logits = jnp.where(ok[None, None], logits, NEG_INF)
+        m_blk = jnp.max(logits, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        pr = jnp.exp(logits - m_new[..., None])
+        sc = jnp.exp(m_prev - m_new)
+        l_new = l_prev * sc + pr.sum(-1)
+        acc = acc * sc[..., None] + jnp.einsum(
+            "bhts,bshk->bhtk", pr.astype(v_blk.dtype), v_blk
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    a0 = jnp.zeros((b, h, t, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (cb, rb, starts))
+    out = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q_nope.dtype)
+    return jnp.moveaxis(out, 1, 2)  # [B,T,H,dv]
+
+
+def mla_attention(cfg, p: dict, x: jax.Array, positions: jax.Array,
+                  chunked: bool | None = None) -> jax.Array:
+    """Train / full-sequence path (decompressed K/V; chunked when long)."""
+    b, t, _ = x.shape
+    dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _q_proj(cfg, p, x, positions)
+    c_kv, k_rope = _kv_latent(cfg, p, x, positions)
+    use_chunked = (t >= CHUNKED_THRESHOLD) if chunked is None else chunked
+    if use_chunked:
+        out = _mla_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope)
+        return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"].astype(x.dtype))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"].astype(x.dtype))
+    scale = 1.0 / np.sqrt(dn + cfg.qk_rope_head_dim)
+    logits = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope)
+              + jnp.einsum("bthk,bsk->bhts", q_rope, k_rope)) * scale
+    qpos = jnp.arange(t)[:, None]
+    mask = jnp.where(jnp.arange(t)[None, :] <= qpos, 0.0, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32) + mask,
+                           axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", probs, v)
+    return jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+
+
+def mla_prefill(cfg, p: dict, x: jax.Array, positions: jax.Array):
+    """Returns (out, (c_kv_cache, k_rope_cache)) — the compressed cache."""
+    out = mla_attention(cfg, p, x, positions)
+    c_kv, k_rope = _kv_latent(cfg, p, x, positions)
+    return out, (c_kv, k_rope)
+
+
+def mla_decode(cfg, p: dict, x: jax.Array, pos: jax.Array,
+               cache_c: jax.Array, cache_kr: jax.Array,
+               absorbed: bool = True):
+    """One-token decode against the compressed cache.
+
+    absorbed=True: the beyond-paper-efficient path (no decompression).
+    absorbed=False: naive baseline — decompress all K/V each step (used as
+    the §Perf before/after comparison point).
+    """
+    b = x.shape[0]
+    s = cache_c.shape[1]
+    dn, dv, dr = cfg.qk_nope_head_dim, cfg.v_head_dim, cfg.qk_rope_head_dim
+    q_nope, q_rope = _q_proj(cfg, p, x, pos[:, None])   # [B,1,H,*]
+    c_kv, k_rope = _kv_latent(cfg, p, x, pos[:, None])
+    idx = pos % s
+    cache_c = cache_c.at[jnp.arange(b), idx].set(c_kv[:, 0])
+    cache_kr = cache_kr.at[jnp.arange(b), idx].set(k_rope[:, 0])
+    kpos = jnp.arange(s)[None, :]
+    slot_pos = pos[:, None] - ((pos[:, None] - kpos) % s)
+    mask = jnp.where(slot_pos >= 0, 0.0, NEG_INF)[:, None, :]  # [B,1,S]->bhs
+    scale = 1.0 / np.sqrt(dn + dr)
+    if absorbed:
+        # q_abs[h] = q_nope[h] @ W_uk[h]^T  in latent space
+        q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0],
+                           p["w_uk"].astype(x.dtype))
+        logits = (jnp.einsum("bhr,bsr->bhs", q_abs, cache_c)
+                  + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], cache_kr)) * scale
+        probs = jax.nn.softmax(logits.astype(jnp.float32) + mask,
+                               axis=-1).astype(x.dtype)
+        out_c = jnp.einsum("bhs,bsr->bhr", probs, cache_c)
+        out = jnp.einsum("bhr,rhk->bhk", out_c, p["w_uv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("bsr,rhk->bshk", cache_c,
+                            p["w_uk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rhk->bshk", cache_c, p["w_uv"].astype(x.dtype))
+        logits = (jnp.einsum("bhk,bshk->bhs", q_nope[:, 0], k_nope)
+                  + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], cache_kr)) * scale
+        probs = jax.nn.softmax(logits.astype(jnp.float32) + mask,
+                               axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhs,bshk->bhk", probs, v)
+    out = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return out[:, None, :], cache_c, cache_kr

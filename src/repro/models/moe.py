@@ -1,0 +1,109 @@
+"""Mixture-of-Experts: token-choice top-k, capacity-bounded slot dispatch.
+
+Static-shape dispatch (TPU/XLA-friendly, EP-shardable):
+  1. router softmax -> top-k (expert, weight) per token,
+  2. rank tokens within each expert (sorted scatter), drop beyond capacity,
+  3. scatter tokens into an [E, C, D] slot buffer (this is where GSPMD
+     inserts the data->expert all-to-all when E is sharded on `model`),
+  4. one batched einsum per matrix over all experts (MXU-dense),
+  5. weighted scatter-add back to token positions.
+
+Aux losses: switch-style load balance + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.constraints import maybe_shard
+
+
+def moe_params(key: jax.Array, cfg) -> dict:
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * s_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * s_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * s_out,
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": jax.random.normal(k1, (d, fs), jnp.float32) * s_in,
+            "w_up": jax.random.normal(k2, (d, fs), jnp.float32) * s_in,
+            "w_down": jax.random.normal(k3, (fs, d), jnp.float32) * s_out,
+        }
+    return p
+
+
+def moe_ffn(cfg, p: dict, x: jax.Array) -> tuple[jax.Array, dict]:
+    """x: [B, T, D] -> (y, aux) with aux = {load_balance_loss, z_loss}."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(b * t, d)
+    n = b * t
+    cap = int(np.ceil(n * k / e * cfg.capacity_factor))
+
+    logits = jnp.einsum("nd,de->ne", xf, p["router"].astype(x.dtype))
+    logits32 = logits.astype(jnp.float32)
+    probs = jax.nn.softmax(logits32, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                     # [N, k]
+    top_w = top_w / jnp.clip(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Rank each (token, k) entry within its expert by flat order.
+    flat_e = top_e.reshape(-1)                                  # [N*k]
+    token_of = jnp.repeat(jnp.arange(n), k)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # position within expert = index_in_sorted - start_of_expert
+    starts = jnp.cumsum(jnp.bincount(sorted_e, length=e)) - jnp.bincount(
+        sorted_e, length=e)
+    rank_sorted = jnp.arange(n * k) - starts[sorted_e]
+    rank = jnp.zeros(n * k, jnp.int32).at[order].set(
+        rank_sorted.astype(jnp.int32))
+    ok = rank < cap
+    # Dropped entries are clamped into slot 0 but contribute zeros (masked
+    # add), so no overflow row is needed and the flat buffer stays exactly
+    # [E*C, D] — shardable on the expert blocks (E*C % model_size == 0).
+    slot = jnp.where(ok, flat_e * cap + rank, 0)
+    okf = ok.astype(x.dtype)[:, None]
+
+    # Dispatch scatter-add; constrain to expert-parallel sharding so the
+    # buffer (and the scatter producing it) partitions over the `model`
+    # axis instead of replicating (this is the data->expert all-to-all).
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].add(
+        xf[token_of] * okf, mode="drop")
+    buf = maybe_shard(buf, "model", None)
+    h = buf.reshape(e, cap, d)
+    h = maybe_shard(h, "model", None, None)
+    g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", h, p["w_up"].astype(x.dtype))
+    o = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                   p["w_down"].astype(x.dtype))
+    o = maybe_shard(o, "model", None, None).reshape(e * cap, d)
+
+    # Combine: weighted masked gather + scatter-add back to tokens.
+    contrib = o[slot] * (top_w.reshape(-1)[:, None].astype(x.dtype) * okf)
+    y = jnp.zeros((n, d), x.dtype).at[token_of].add(contrib)
+    y = maybe_shard(y, ("pod", "data"), None)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        sg = jnp.einsum("nd,df->nf", xf, sp["w_gate"].astype(x.dtype))
+        su = jnp.einsum("nd,df->nf", xf, sp["w_up"].astype(x.dtype))
+        y = y + jnp.einsum("nf,fd->nd", jax.nn.silu(sg) * su,
+                           sp["w_down"].astype(x.dtype))
+
+    # Aux losses (fp32).
+    me = probs.mean(0)                                          # mean prob/expert
+    ce = jnp.zeros(e, jnp.float32).at[flat_e].add(1.0) / (n * k)  # token frac
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce),
+        "z_loss": jnp.mean(jax.nn.logsumexp(logits32, axis=-1) ** 2),
+    }
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: within-chunk term is a masked attention-like matmul
+(MXU-friendly); across chunks a sequential state scan carries
+S in R^{H x N x P}. Decode is a single-step state update (O(1) per token —
+why the ssm/hybrid archs run the long_500k cell).
+
+Layer structure (Mamba2 block):
+  in_proj -> [z, x, B, C, dt]; depthwise causal conv + SiLU on (x,B,C);
+  SSD(x, dt, A, B, C) + D*x; y = RMSNorm(y * silu(z)); out_proj.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import rms_norm
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads
+
+
+def ssm_params(key: jax.Array, cfg) -> dict:
+    d = cfg.d_model
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n  # x + B + C (single group)
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "in_proj": jax.random.normal(
+            ks[0], (d, 2 * d_inner + 2 * n + h), jnp.float32) * s,
+        "conv_w": jax.random.normal(
+            ks[1], (cfg.ssm_conv_width, conv_ch), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.zeros((h,), jnp.float32),          # A = -exp(a_log)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus init ~0.12
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": jax.random.normal(
+            ks[2], (d_inner, d), jnp.float32) / np.sqrt(d_inner),
+    }
+
+
+def _split_proj(cfg, p, u):
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("btd,de->bte", u, p["in_proj"].astype(u.dtype))
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * n]
+    dt = zxbcdt[..., -h:]
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, dtype):
+    """Depthwise causal conv width W via shifted adds (no conv primitive)."""
+    w = p["conv_w"].astype(dtype)
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    t = xbc.shape[1]
+    out = sum(pad[:, k:k + t] * w[k] for k in range(width))
+    return jax.nn.silu(out + p["conv_b"].astype(dtype))
+
+
+def ssd_chunked(cfg, x, dt, a_log, b, c, d_skip):
+    """x: [B,T,H,P]; dt: [B,T,H]; b,c: [B,T,N]. Returns y: [B,T,H,P].
+    fp32 internals for numerical stability of the decay products."""
+    bs, t, h, pdim = x.shape
+    n = b.shape[-1]
+    q = min(cfg.ssm_chunk, t)
+    while t % q:
+        q //= 2
+    nc = t // q
+    x32 = x.astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    b32, c32 = b.astype(jnp.float32), c.astype(jnp.float32)
+    neg_a = -jnp.exp(a_log.astype(jnp.float32))          # [H]
+    logdec = dt32 * neg_a[None, None]                    # [B,T,H] log a_t
+    xc = x32.reshape(bs, nc, q, h, pdim)
+    dtc = dt32.reshape(bs, nc, q, h)
+    bc = b32.reshape(bs, nc, q, n)
+    cc = c32.reshape(bs, nc, q, n)
+    lc = logdec.reshape(bs, nc, q, h)
+    cum = jnp.cumsum(lc, axis=2)                         # [B,nc,Q,H]
+    total = cum[:, :, -1]                                # [B,nc,H]
+
+    # Intra-chunk (attention-like, causal).
+    rel = cum[:, :, :, None] - cum[:, :, None, :]        # [B,nc,Q(t),Q(s),H]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    att = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    gbc = jnp.einsum("bcin,bcjn->bcij", cc, bc)          # C[t].B[s]
+    w_ts = att * gbc[..., None] * dtc[:, :, None]        # [B,nc,t,s,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w_ts, xc)
+
+    # Chunk-local states: S_c = sum_s exp(total - cum[s]) dt[s] B[s] (x) x[s]
+    sdec = jnp.exp(total[:, :, None] - cum)              # [B,nc,Q,H]
+    s_loc = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", sdec * dtc, bc, xc)
+
+    # Inter-chunk recurrence: S_{c} = exp(total_{c-1}) S_{c-1} + S_loc_{c-1}
+    def step(s_prev, inp):
+        tot_c, sl_c = inp
+        s_out = s_prev                                    # state BEFORE chunk
+        s_next = jnp.exp(tot_c)[..., None, None] * s_prev + sl_c
+        return s_next, s_out
+
+    tot_sw = jnp.moveaxis(total, 1, 0)                   # [nc,B,H]
+    sl_sw = jnp.moveaxis(s_loc, 1, 0)                    # [nc,B,H,N,P]
+    init = jnp.zeros((bs, h, n, pdim), jnp.float32)
+    _, s_prevs = jax.lax.scan(step, init, (tot_sw, sl_sw))
+    s_prev = jnp.moveaxis(s_prevs, 0, 1)                 # [B,nc,H,N,P]
+
+    # Inter-chunk output: y[t] += C[t] . (exp(cum[t]) * S_prev)
+    y_inter = jnp.einsum("bcin,bcihnp->bcihp",
+                         cc, jnp.exp(cum)[..., None, None] *
+                         s_prev[:, :, None])
+    y = (y_intra + y_inter).reshape(bs, t, h, pdim)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x32
+    return y.astype(x.dtype)
+
+
+def ssm_forward(cfg, p: dict, u: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 block. u: [B,T,D] -> [B,T,D]."""
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, xbc, dtraw = _split_proj(cfg, p, u)
+    xbc = _causal_conv(p, xbc, u.dtype)
+    x = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    bs, t, _ = u.shape
+    xh = x.reshape(bs, t, h, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)
+                         + p["dt_bias"][None, None].astype(jnp.float32))
+    y = ssd_chunked(cfg, xh, dt, p["a_log"], b, c, p["d_skip"])
+    y = y.reshape(bs, t, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(u.dtype))
+
+
+def ssm_naive(cfg, p: dict, u: jax.Array) -> jax.Array:
+    """Sequential-recurrence oracle (tests: chunked == naive)."""
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    z, xbc, dtraw = _split_proj(cfg, p, u)
+    xbc = _causal_conv(p, xbc, u.dtype)
+    x = xbc[..., :d_inner]
+    b = xbc[..., d_inner:d_inner + n]
+    c = xbc[..., d_inner + n:]
+    bs, t, _ = u.shape
+    pdim = cfg.ssm_head_dim
+    xh = x.reshape(bs, t, h, pdim).astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw.astype(jnp.float32)
+                         + p["dt_bias"][None, None].astype(jnp.float32))
+    neg_a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp           # [B,H,P],[B,H],[B,N],[B,N]
+        a_t = jnp.exp(dt_t * neg_a[None])   # [B,H]
+        state = (a_t[..., None, None] * state
+                 + jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t))
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((bs, h, n, pdim), jnp.float32)
+    _, ys = jax.lax.scan(step, init, (jnp.moveaxis(xh, 1, 0),
+                                      jnp.moveaxis(dt, 1, 0),
+                                      jnp.moveaxis(b.astype(jnp.float32), 1, 0),
+                                      jnp.moveaxis(c.astype(jnp.float32), 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bs, t, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    return jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(u.dtype))
+
+
+# ----------------------------------------------------------------------- #
+# Decode (single step)
+# ----------------------------------------------------------------------- #
+
+def ssm_init_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, n, cfg.ssm_head_dim), jnp.float32),
+    }
+
+
+def ssm_decode(cfg, p: dict, u: jax.Array, cache: dict):
+    """u: [B,1,D] -> (y [B,1,D], new_cache). O(1) per token."""
+    d_inner, h = ssm_dims(cfg)
+    n = cfg.ssm_state
+    pdim = cfg.ssm_head_dim
+    z, xbc, dtraw = _split_proj(cfg, p, u)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B,W,C]
+    w = p["conv_w"].astype(u.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(u.dtype)
+    xbc_t = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:]
+    x = xbc_t[:, :d_inner].reshape(-1, h, pdim).astype(jnp.float32)
+    b = xbc_t[:, d_inner:d_inner + n].astype(jnp.float32)
+    c = xbc_t[:, d_inner + n:].astype(jnp.float32)
+    dt = jax.nn.softplus(dtraw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"][None].astype(jnp.float32))
+    neg_a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    a_t = jnp.exp(dt * neg_a[None])
+    state = (a_t[..., None, None] * cache["state"]
+             + jnp.einsum("bh,bn,bhp->bhnp", dt, b, x))
+    y = jnp.einsum("bn,bhnp->bhp", c, state)
+    y = y + p["d_skip"][None, :, None].astype(jnp.float32) * x
+    y = y.reshape(-1, 1, d_inner).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"])
+    y = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(u.dtype))
+    return y, {"conv": new_conv, "state": state}

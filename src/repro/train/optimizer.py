@@ -1,0 +1,107 @@
+"""Optimizers (AdamW, SGD+momentum), LR schedules, global-norm clipping.
+
+Pure-JAX (no optax): states are pytrees mirroring params, so every sharding
+rule that applies to a param applies to its optimizer moments for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def adamw_init(params: Params) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> tuple[Params, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params: Params, grads: Params,
+                 state: dict, lr_scale: jax.Array | float = 1.0
+                 ) -> tuple[Params, dict]:
+    step = state["step"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.learning_rate * lr_scale
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        p32 = p32 - lr * (mhat / (jnp.sqrt(nhat) + cfg.eps)
+                          + cfg.weight_decay * p32)
+        return p32.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in
+           zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+
+def sgd_momentum_init(params: Params) -> dict:
+    return {"mom": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_momentum_update(params: Params, grads: Params, state: dict,
+                        lr: float, momentum: float = 0.9
+                        ) -> tuple[Params, dict]:
+    def upd(p, g, m):
+        m = momentum * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mom"])
+    out = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    return (treedef.unflatten([o[0] for o in out]),
+            {"mom": treedef.unflatten([o[1] for o in out]),
+             "step": state["step"] + 1})
+
+
+def warmup_cosine(step: jax.Array, warmup: int, total: int,
+                  floor: float = 0.1) -> jax.Array:
+    """LR multiplier: linear warmup then cosine decay to `floor`."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(1.0, warmup)
+    prog = jnp.clip((step - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)

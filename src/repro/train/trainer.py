@@ -1,0 +1,130 @@
+"""Training loop: jit'd step with donation, grad accumulation, clipping,
+warmup-cosine schedule, optional int8 grad compression, checkpoint/resume,
+heartbeat + straggler hooks.
+
+The same build_train_step() powers the dry-run lowering (launch/dryrun.py)
+and the real CPU training example (examples/train_lm.py) — one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, TrainConfig
+from repro.models.model import init_params, loss_fn
+from repro.train import grad_compress
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, warmup_cosine)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key: jax.Array):
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    if tcfg.grad_compression:
+        opt["err"] = grad_compress.init_error(params)
+    return params, opt
+
+
+def build_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                     ) -> Callable[..., Any]:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+    Microbatching: batch's leading dim is split into tcfg.microbatches
+    accumulation slices via lax.scan (keeps peak activation memory flat)."""
+    acfg = AdamWConfig(learning_rate=tcfg.learning_rate,
+                       beta1=tcfg.beta1, beta2=tcfg.beta2, eps=tcfg.eps,
+                       weight_decay=tcfg.weight_decay)
+
+    def loss_of(params, batch):
+        return loss_fn(cfg, params, batch, z_loss=tcfg.z_loss,
+                       moe_aux=tcfg.moe_aux_loss)
+
+    def train_step(params, opt_state, batch):
+        mb = tcfg.microbatches
+        if mb > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(mb, b // mb, *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc(carry, mb_batch):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_of, has_aux=True)(
+                    params, mb_batch)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (gsum, lsum), _ = jax.lax.scan(acc, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            metrics = {"nll": loss}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        if tcfg.grad_compression:
+            grads, new_err = grad_compress.compress_grads_with_feedback(
+                grads, opt_state["err"])
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr_scale = warmup_cosine(opt_state["step"], tcfg.warmup_steps,
+                                 tcfg.total_steps)
+        core_state = {k: opt_state[k] for k in ("mu", "nu", "step")}
+        new_params, new_core = adamw_update(acfg, params, grads, core_state,
+                                            lr_scale)
+        new_opt = dict(new_core)
+        if tcfg.grad_compression:
+            new_opt["err"] = new_err
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        metrics["lr_scale"] = lr_scale
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainLoopHooks:
+    on_step: Callable[[int, dict, float], None] | None = None
+    heartbeat: Callable[[float], None] | None = None
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, data_iter,
+               n_steps: int, checkpoint=None, resume: bool = True,
+               hooks: TrainLoopHooks | None = None,
+               jit_kwargs: dict | None = None):
+    """Run n_steps; returns (params, opt_state, history)."""
+    hooks = hooks or TrainLoopHooks()
+    params, opt = init_train_state(cfg, tcfg, jax.random.PRNGKey(tcfg.seed))
+    start = 0
+    if checkpoint is not None and resume:
+        latest = checkpoint.latest_step()
+        if latest is not None:
+            params, opt, meta = checkpoint.restore(latest, params, opt)
+            start = meta["step"]
+    step_fn = jax.jit(build_train_step(cfg, tcfg),
+                      donate_argnums=(0, 1), **(jit_kwargs or {}))
+    history = []
+    for step in range(start, n_steps):
+        batch = next(data_iter)
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if hooks.heartbeat:
+            hooks.heartbeat(dt)
+        history.append({k: float(v) for k, v in metrics.items()})
+        if hooks.on_step:
+            hooks.on_step(step, history[-1], dt)
+        if checkpoint is not None and tcfg.checkpoint_every and \
+                (step + 1) % tcfg.checkpoint_every == 0:
+            checkpoint.save(step + 1, params, opt)
+    if checkpoint is not None:
+        checkpoint.save(n_steps, params, opt)
+        checkpoint.wait()
+    return params, opt, history

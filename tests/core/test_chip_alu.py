@@ -1,0 +1,311 @@
+"""Chip model + PULSAR executor + bit-serial ALU: bit-exact vs NumPy."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alu import BitSerialAlu
+from repro.core.chip import PulsarChip, majority_bits
+from repro.core.geometry import DramGeometry
+from repro.core.profiles import MFR_H, MFR_M
+from repro.core.pulsar import PulsarExecutor, buddy_assign, build_region
+from repro.core.replication import plan
+
+GEOM = DramGeometry(row_bits=256, rows_per_subarray=256, subarrays_per_bank=2,
+                    banks=1, predecoder_widths=(2, 2, 2, 2))
+N_EL = 256  # elements per row (= row_bits)
+W = GEOM.words_per_row
+
+
+def fresh_alu(width=8, profile=MFR_H, max_n_rg=None):
+    chip = PulsarChip(GEOM, profile, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, profile, None)  # full yield
+    x = PulsarExecutor(chip, bank=0, subarray=0)
+    return BitSerialAlu(x, width=width, max_n_rg=max_n_rg)
+
+
+def rand(width, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 1 << width, N_EL, dtype=np.uint64)
+
+
+# --------------------------------------------------------------------- #
+# majority_bits
+# --------------------------------------------------------------------- #
+
+@given(n=st.integers(1, 9), seed=st.integers(0, 999))
+@settings(max_examples=50, deadline=None)
+def test_majority_bits_matches_popcount(n, seed):
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 2**32, (n, 8), dtype=np.uint64).astype(np.uint32)
+    thresh = n // 2 + 1
+    got = majority_bits(rows, thresh)
+    bits = ((rows[:, :, None] >> np.arange(32)[None, None]) & 1).sum(0)
+    want_bits = (bits >= thresh).astype(np.uint32)
+    want = (want_bits << np.arange(32)[None]).sum(-1, dtype=np.uint64).astype(np.uint32)
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------- #
+# buddy assignment + region
+# --------------------------------------------------------------------- #
+
+@given(m=st.sampled_from([3, 5, 7]), n_log=st.integers(2, 5))
+@settings(max_examples=40, deadline=None)
+def test_buddy_assign_partitions_hypercube(m, n_log):
+    n = 1 << n_log
+    if n < m:
+        return
+    rp = plan(m, n)
+    per_input, neutral = buddy_assign(m, rp.copies, rp.n_neutral, n_log)
+    seen = set()
+    for blocks, count in [(b, rp.copies) for b in per_input] + [(neutral, rp.n_neutral)]:
+        tot = 0
+        for start, size in blocks:
+            assert start % size == 0  # buddy aligned
+            blockset = set(range(start, start + size))
+            assert not (blockset & seen)
+            seen |= blockset
+            tot += size
+        assert tot == count
+    assert seen == set(range(n))
+
+
+def test_region_matches_decoder():
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    region = build_region(chip, 0, 0, 16)
+    assert set(region.rows_by_combo) == set(
+        chip.decoder.activated_rows(region.rf, region.rs))
+
+
+# --------------------------------------------------------------------- #
+# PULSAR primitives on the chip
+# --------------------------------------------------------------------- #
+
+def test_multi_row_init_copies_to_block():
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    data = np.arange(W, dtype=np.uint32)
+    src = 200
+    chip.write_row(0, src, data)
+    rows = x.multi_row_init_block(src, 8)
+    assert len(rows) == 8
+    for r in rows:
+        np.testing.assert_array_equal(chip.peek(0, r), data)
+
+
+def test_bulk_write_block():
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    data = np.full(W, 0xDEADBEEF, np.uint32)
+    rows = x.bulk_write_block(data, 16)
+    assert len(rows) == 16
+    for r in rows:
+        np.testing.assert_array_equal(chip.peek(0, r), data)
+
+
+@pytest.mark.parametrize("n_rg", [4, 8, 16])
+@pytest.mark.parametrize("m", [3, 5])
+def test_maj_on_random_data(n_rg, m):
+    if n_rg < m:
+        pytest.skip("N_RG < M")
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    rng = np.random.default_rng(42 + n_rg + m)
+    srcs, datas = [], []
+    for i in range(m):
+        row = 200 + i
+        data = rng.integers(0, 2**32, W, dtype=np.uint64).astype(np.uint32)
+        chip.write_row(0, row, data)
+        srcs.append(row)
+        datas.append(data)
+    dst = 240
+    report = x.maj(dst, srcs, n_rg)
+    votes = np.stack(datas)
+    want = majority_bits(votes, m // 2 + 1)
+    np.testing.assert_array_equal(chip.peek(0, dst), want)
+    # Default pow2 staging plan: power-of-two copies.
+    c = report.copies
+    assert c & (c - 1) == 0 and c >= 1
+    assert report.n_neutral == n_rg - m * c
+    # Paper's maximal plan also executes correctly.
+    dst2 = 241
+    rep2 = x.maj(dst2, srcs, n_rg, plan_style="max")
+    np.testing.assert_array_equal(chip.peek(0, dst2), want)
+    assert rep2.copies == n_rg // m
+
+
+def test_fracdram_baseline_maj3():
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    rng = np.random.default_rng(0)
+    datas = [rng.integers(0, 2**32, W, dtype=np.uint64).astype(np.uint32)
+             for _ in range(3)]
+    for i, d in enumerate(datas):
+        chip.write_row(0, 200 + i, d)
+    rep = x.fracdram_maj3(240, [200, 201, 202])
+    want = majority_bits(np.stack(datas), 2)
+    np.testing.assert_array_equal(chip.peek(0, 240), want)
+    assert rep.n_neutral == 1 and rep.copies == 1
+
+
+def test_mfr_m_neutral_via_bias_write():
+    chip = PulsarChip(GEOM, MFR_M, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_M, None)
+    x = PulsarExecutor(chip, 0, 0)
+    rng = np.random.default_rng(1)
+    datas = [rng.integers(0, 2**32, W, dtype=np.uint64).astype(np.uint32)
+             for _ in range(3)]
+    for i, d in enumerate(datas):
+        chip.write_row(0, 200 + i, d)
+    x.maj(240, [200, 201, 202], n_rg=4)  # 1 neutral row via bias write
+    want = majority_bits(np.stack(datas), 2)
+    np.testing.assert_array_equal(chip.peek(0, 240), want)
+
+
+def test_stability_mask_flips_unstable_bitlines():
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    datas = [np.zeros(W, np.uint32), np.zeros(W, np.uint32),
+             np.full(W, 0xFFFFFFFF, np.uint32)]
+    for i, d in enumerate(datas):
+        chip.write_row(0, 200 + i, d)
+    mask = np.ones(GEOM.row_bits, bool)
+    mask[:32] = False  # first word unstable
+    x.maj(240, [200, 201, 202], n_rg=8, stability_mask=mask)
+    got = chip.peek(0, 240)
+    assert got[0] == 0xFFFFFFFF  # flipped (correct result is 0)
+    assert (got[1:] == 0).all()
+
+
+# --------------------------------------------------------------------- #
+# ALU vs NumPy
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("profile,n_rg", [(MFR_H, 16), (MFR_H, 4), (MFR_M, 8)])
+def test_alu_logic(profile, n_rg):
+    alu = fresh_alu(8, profile, max_n_rg=n_rg)
+    a, b = rand(8, 1), rand(8, 2)
+    va, vb = alu.load(a), alu.load(b)
+    np.testing.assert_array_equal(alu.store(alu.and_(va, vb)), a & b)
+    np.testing.assert_array_equal(alu.store(alu.or_(va, vb)), a | b)
+    np.testing.assert_array_equal(alu.store(alu.xor(va, vb)), a ^ b)
+
+
+@pytest.mark.parametrize("n_rg", [4, 8, 16])
+def test_alu_add_sub(n_rg):
+    alu = fresh_alu(8, max_n_rg=n_rg)
+    a, b = rand(8, 3), rand(8, 4)
+    va, vb = alu.load(a), alu.load(b)
+    np.testing.assert_array_equal(alu.store(alu.add(va, vb)), (a + b) & 0xFF)
+    np.testing.assert_array_equal(alu.store(alu.sub(va, vb)), (a - b) & 0xFF)
+
+
+def test_alu_mul():
+    alu = fresh_alu(8, max_n_rg=16)
+    a, b = rand(8, 5), rand(8, 6)
+    va, vb = alu.load(a), alu.load(b)
+    np.testing.assert_array_equal(alu.store(alu.mul(va, vb)), (a * b) & 0xFF)
+
+
+def test_alu_div():
+    alu = fresh_alu(6, max_n_rg=16)
+    a = rand(6, 7)
+    b = rand(6, 8) | 1  # nonzero
+    va, vb = alu.load(a), alu.load(b)
+    q, r = alu.div(va, vb)
+    np.testing.assert_array_equal(alu.store(q), a // b)
+    np.testing.assert_array_equal(alu.store(r), a % b)
+
+
+def test_alu_reductions():
+    alu = fresh_alu(8, max_n_rg=16)
+    a = rand(8, 9)
+    va = alu.load(a)
+    and_r = alu.store(alu.reduce_planes(va, "and"))
+    or_r = alu.store(alu.reduce_planes(va, "or"))
+    xor_r = alu.store(alu.xor_reduce_planes(va))
+    np.testing.assert_array_equal(and_r, (a == 0xFF).astype(np.uint64))
+    np.testing.assert_array_equal(or_r, (a != 0).astype(np.uint64))
+    par = np.zeros_like(a)
+    for j in range(8):
+        par ^= (a >> j) & 1
+    np.testing.assert_array_equal(xor_r, par)
+
+
+def test_alu_popcount_less_than():
+    alu = fresh_alu(8, max_n_rg=16)
+    a, b = rand(8, 10), rand(8, 11)
+    va, vb = alu.load(a), alu.load(b)
+    pc = alu.store(alu.popcount_planes(va))
+    want = np.array([bin(int(x)).count("1") for x in a], np.uint64)
+    np.testing.assert_array_equal(pc, want)
+    lt = alu.store(alu.less_than(va, vb))
+    np.testing.assert_array_equal(lt, (a < b).astype(np.uint64))
+
+
+def test_alu_stats_accumulate():
+    alu = fresh_alu(8, max_n_rg=8)
+    a, b = rand(8, 12), rand(8, 13)
+    va, vb = alu.load(a), alu.load(b)
+    alu.add(va, vb)
+    st_ = alu.chip.stats
+    assert st_.latency_ns > 0 and st_.energy_j > 0 and st_.n_acts > 0
+    assert alu.op_counts.get("maj3", 0) > 0
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_property_add_commutes(seed):
+    alu = fresh_alu(8, max_n_rg=8)
+    a, b = rand(8, seed), rand(8, seed + 1000)
+    va, vb = alu.load(a), alu.load(b)
+    r1 = alu.store(alu.add(va, vb))
+    r2 = alu.store(alu.add(vb, va))
+    np.testing.assert_array_equal(r1, r2)
+
+
+def test_chained_staging_in_place_input():
+    """Chained-staging (§Perf P4): the previous APA leaves its result in all
+    region rows; the next op in the same region skips that input's staging
+    — bit-exact, with measurably fewer command sequences."""
+    chip = PulsarChip(GEOM, MFR_H, seed=0)
+    chip.decoder = chip.decoder.__class__(GEOM, MFR_H, None)
+    x = PulsarExecutor(chip, 0, 0)
+    rng = np.random.default_rng(5)
+    rows = {}
+    for i, name in enumerate("abcde"):
+        r = 200 + i
+        chip.write_row(0, r, rng.integers(0, 2**32, GEOM.words_per_row,
+                                          dtype=np.uint64).astype(np.uint32))
+        rows[name] = r
+    # op1: t = MAJ3(a, b, c)
+    x.maj(240, [rows["a"], rows["b"], rows["c"]], n_rg=8)
+    seq_before = chip.stats.n_ops
+    # op2 (chained): u = MAJ3(t, d, e) with t resident in the region.
+    rep = x.maj(241, [240, rows["d"], rows["e"]], n_rg=8, in_place_input=0)
+    chained_seqs = chip.stats.n_ops - seq_before
+    want = majority_bits(np.stack([chip.peek(0, 240), chip.peek(0, rows["d"]),
+                                   chip.peek(0, rows["e"])]), 2)
+    np.testing.assert_array_equal(chip.peek(0, 241), want)
+    # Unchained equivalent for comparison.
+    seq_before = chip.stats.n_ops
+    x.maj(242, [240, rows["d"], rows["e"]], n_rg=8)
+    unchained_seqs = chip.stats.n_ops - seq_before
+    np.testing.assert_array_equal(chip.peek(0, 242), want)
+    assert chained_seqs < unchained_seqs
+
+
+def test_chained_cost_model_cheaper():
+    from repro.core.cost_model import CostModel
+    cm = CostModel()
+    base = cm.full_adder(5, 8, 4)
+    chained = cm.full_adder(5, 8, 4, chained=True)
+    assert chained.latency_ns < base.latency_ns
+    assert chained.n_sequences < base.n_sequences

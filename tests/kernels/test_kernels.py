@@ -1,0 +1,181 @@
+"""Per-kernel validation: Pallas (interpret mode) vs jnp oracle vs NumPy,
+swept over shapes/dtypes, plus hypothesis property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.layout import from_vertical, to_vertical
+from repro.kernels import ref
+from repro.kernels.bit_transpose import bit_transpose32
+from repro.kernels.bitserial_add import bitserial_add
+from repro.kernels.charge_share import charge_share
+from repro.kernels.maj_n import maj_n
+
+
+def rand_words(shape, seed, dtype=np.int32):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2**32, shape, dtype=np.uint64).astype(np.uint32) \
+        .view(np.int32).astype(dtype) if dtype == np.int32 else \
+        rng.integers(0, 2**32, shape, dtype=np.uint64).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# maj_n
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n,threshold", [(1, 1), (3, 2), (4, 3), (5, 3),
+                                         (7, 4), (16, 9), (31, 16), (32, 17)])
+@pytest.mark.parametrize("w", [128, 1024, 1536])
+def test_maj_n_vs_numpy(n, threshold, w):
+    x = rand_words((n, w), seed=n * 100 + w)
+    got = np.asarray(maj_n(jnp.asarray(x), threshold, interpret=True))
+    bits = ((x.view(np.uint32)[:, :, None] >> np.arange(32)[None, None]) & 1)
+    want_bits = (bits.sum(0) >= threshold).astype(np.uint32)
+    want = (want_bits << np.arange(32)[None]).sum(-1, dtype=np.uint64) \
+        .astype(np.uint32).view(np.int32)
+    np.testing.assert_array_equal(got.view(np.int32), want)
+
+
+@pytest.mark.parametrize("n,threshold", [(3, 2), (5, 3), (9, 5)])
+def test_maj_n_ref_matches_pallas(n, threshold):
+    x = jnp.asarray(rand_words((n, 2048), seed=7))
+    np.testing.assert_array_equal(
+        np.asarray(maj_n(x, threshold, interpret=True)),
+        np.asarray(ref.maj_n(x, threshold)))
+
+
+@given(n=st.integers(1, 9), seed=st.integers(0, 50))
+@settings(max_examples=15, deadline=None)
+def test_maj_n_property_replication_invariance(n, seed):
+    """MAJ over k-replicated inputs == MAJ over originals (the paper's
+    majority-algebra identity behind input replication, §5.1)."""
+    if n % 2 == 0:
+        return
+    x = jnp.asarray(rand_words((n, 256), seed=seed))
+    base = ref.maj_n(x, n // 2 + 1)
+    rep = jnp.concatenate([x, x, x], axis=0)  # 3 copies
+    got = ref.maj_n(rep, (3 * n) // 2 + 1)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+def test_maj_n_all_ones_zeros():
+    ones = jnp.full((5, 256), -1, jnp.int32)
+    zeros = jnp.zeros((5, 256), jnp.int32)
+    assert (np.asarray(maj_n(ones, 3, interpret=True)) == -1).all()
+    assert (np.asarray(maj_n(zeros, 3, interpret=True)) == 0).all()
+
+
+# --------------------------------------------------------------------- #
+# bitserial_add
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("width", [4, 8, 16, 32])
+@pytest.mark.parametrize("n_el", [256, 4096])
+def test_bitserial_add_vs_int_add(width, n_el):
+    rng = np.random.default_rng(width + n_el)
+    a = rng.integers(0, 1 << width, n_el, dtype=np.uint64)
+    b = rng.integers(0, 1 << width, n_el, dtype=np.uint64)
+    pa = to_vertical(a, width).view(np.int32)
+    pb = to_vertical(b, width).view(np.int32)
+    got_planes = np.asarray(bitserial_add(jnp.asarray(pa), jnp.asarray(pb),
+                                          interpret=True))
+    got = from_vertical(got_planes.view(np.uint32))
+    np.testing.assert_array_equal(got, (a + b) & ((1 << width) - 1))
+
+
+def test_bitserial_add_ref_matches():
+    a = jnp.asarray(rand_words((8, 1024), 1))
+    b = jnp.asarray(rand_words((8, 1024), 2))
+    np.testing.assert_array_equal(
+        np.asarray(bitserial_add(a, b, interpret=True)),
+        np.asarray(ref.bitserial_add(a, b)))
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_bitserial_add_property(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << 16, 64, dtype=np.uint64)
+    b = rng.integers(0, 1 << 16, 64, dtype=np.uint64)
+    pa = jnp.asarray(to_vertical(a, 16).view(np.int32))
+    pb = jnp.asarray(to_vertical(b, 16).view(np.int32))
+    got = from_vertical(np.asarray(ref.bitserial_add(pa, pb)).view(np.uint32))
+    np.testing.assert_array_equal(got, (a + b) & 0xFFFF)
+
+
+# --------------------------------------------------------------------- #
+# bit_transpose32
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("g", [1, 7, 128, 1024])
+def test_transpose_matches_layout(g):
+    rng = np.random.default_rng(g)
+    vals = rng.integers(0, 2**32, 32 * g, dtype=np.uint64)
+    # Horizontal: row k of tile t = vals[32t + k]
+    horiz = vals.reshape(g, 32).T.astype(np.uint32).view(np.int32)  # [32, G]
+    got = np.asarray(bit_transpose32(jnp.asarray(horiz), interpret=True))
+    # Vertical oracle: per tile, plane j = bit j of the tile's 32 values.
+    for t in range(min(g, 4)):
+        planes = to_vertical(vals[32 * t:32 * (t + 1)], 32)
+        np.testing.assert_array_equal(got[:, t].view(np.uint32), planes[:, 0])
+
+
+def test_transpose_involution():
+    x = jnp.asarray(rand_words((32, 256), 3))
+    once = ref.bit_transpose32(x)
+    twice = ref.bit_transpose32(once)
+    np.testing.assert_array_equal(np.asarray(twice), np.asarray(x))
+
+
+def test_transpose_pallas_vs_ref():
+    x = jnp.asarray(rand_words((32, 2048), 4))
+    np.testing.assert_array_equal(
+        np.asarray(bit_transpose32(x, interpret=True)),
+        np.asarray(ref.bit_transpose32(x)))
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_transpose_property_involution(seed):
+    x = jnp.asarray(rand_words((32, 64), seed))
+    np.testing.assert_array_equal(
+        np.asarray(ref.bit_transpose32(ref.bit_transpose32(x))),
+        np.asarray(x))
+
+
+# --------------------------------------------------------------------- #
+# charge_share
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("n,b", [(4, 256), (8, 1024), (32, 3000)])
+def test_charge_share_vs_ref(n, b):
+    rng = np.random.default_rng(n + b)
+    v = rng.choice([0.0, 0.6, 1.2], (n, b)).astype(np.float32)
+    caps = (20 + 2 * rng.standard_normal((n, b))).astype(np.float32)
+    got = np.asarray(charge_share(jnp.asarray(v), jnp.asarray(caps),
+                                  vdd=1.2, c_bl=116.0, interpret=True))
+    want = np.asarray(ref.charge_share(jnp.asarray(v), jnp.asarray(caps),
+                                       vdd=1.2, c_bl=116.0))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_charge_share_physics():
+    """All-VDD cells give positive dV scaling with N/(N+r)."""
+    n, b = 8, 128
+    v = np.full((n, b), 1.2, np.float32)
+    caps = np.full((n, b), 20.0, np.float32)
+    dv = np.asarray(ref.charge_share(jnp.asarray(v), jnp.asarray(caps),
+                                     vdd=1.2, c_bl=116.0))
+    expected = 8 * 20 * 0.6 / (116 + 8 * 20)
+    np.testing.assert_allclose(dv, expected, rtol=1e-6)
+
+
+@pytest.mark.parametrize("n,threshold", [(3, 2), (7, 4), (31, 16)])
+def test_maj_n_fast_matches_oracle(n, threshold):
+    x = jnp.asarray(rand_words((n, 1024), seed=99 + n))
+    np.testing.assert_array_equal(
+        np.asarray(ref.maj_n_fast(x, threshold)),
+        np.asarray(ref.maj_n(x, threshold)))

@@ -1,0 +1,277 @@
+"""Model-component tests: attention decode consistency, MLA absorbed path,
+MoE invariants, Mamba2 chunked-vs-naive equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _dense_cfg(**kw):
+    base = dict(name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+                vocab_pad_multiple=128, remat="none", dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# --------------------------------------------------------------------- #
+# GQA attention
+# --------------------------------------------------------------------- #
+
+def test_attention_causal_prefix_property():
+    """Output at position t must not depend on tokens > t."""
+    cfg = _dense_cfg()
+    p = attn.gqa_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 64))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8))
+    full = attn.attention(cfg, p, x, pos)
+    x2 = x.at[:, 5:].set(0.0)
+    part = attn.attention(cfg, p, x2, pos)
+    np.testing.assert_allclose(full[:, :5], part[:, :5], rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_prefill():
+    """Token-by-token decode == full prefill attention outputs."""
+    cfg = _dense_cfg()
+    p = attn.gqa_params(KEY, cfg)
+    b, t = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, t, 64))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    full, (k, v) = attn.attention_prefill(cfg, p, x, pos)
+    ck = jnp.zeros((b, t, cfg.n_kv_heads, 16))
+    cv = jnp.zeros((b, t, cfg.n_kv_heads, 16))
+    outs = []
+    for i in range(t):
+        o, ck, cv = attn.attention_decode(cfg, p, x[:, i:i + 1],
+                                          jnp.full((b,), i), ck, cv)
+        outs.append(o[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_masks_far_tokens():
+    cfg = _dense_cfg(sliding_window=4)
+    p = attn.gqa_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 16, 64))
+    pos = jnp.broadcast_to(jnp.arange(16), (1, 16))
+    base = attn.attention(cfg, p, x, pos)
+    x2 = x.at[:, :8].set(1e3)  # far past perturbation
+    pert = attn.attention(cfg, p, x2, pos)
+    np.testing.assert_allclose(base[:, 14:], pert[:, 14:], rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_ring_cache_decode_swa():
+    """Window-sized ring cache decode == full-cache decode under SWA."""
+    cfg = _dense_cfg(sliding_window=4)
+    p = attn.gqa_params(KEY, cfg)
+    b, t = 1, 12
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, t, 64))
+    ck_full = jnp.zeros((b, t, cfg.n_kv_heads, 16))
+    cv_full = jnp.zeros((b, t, cfg.n_kv_heads, 16))
+    ck_ring = jnp.zeros((b, 4, cfg.n_kv_heads, 16))
+    cv_ring = jnp.zeros((b, 4, cfg.n_kv_heads, 16))
+    for i in range(t):
+        of, ck_full, cv_full = attn.attention_decode(
+            cfg, p, x[:, i:i + 1], jnp.full((b,), i), ck_full, cv_full)
+        orr, ck_ring, cv_ring = attn.attention_decode(
+            cfg, p, x[:, i:i + 1], jnp.full((b,), i), ck_ring, cv_ring)
+        np.testing.assert_allclose(np.asarray(of), np.asarray(orr),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------- #
+# MLA
+# --------------------------------------------------------------------- #
+
+def _mla_cfg():
+    return _dense_cfg(attn_kind="mla", n_heads=4, q_lora_rank=32,
+                      kv_lora_rank=24, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16)
+
+
+def test_mla_decode_absorbed_equals_naive():
+    cfg = _mla_cfg()
+    p = mla_mod.mla_params(KEY, cfg)
+    b, t = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, t, 64))
+    cc = jnp.zeros((b, t, cfg.kv_lora_rank))
+    ckr = jnp.zeros((b, t, cfg.qk_rope_head_dim))
+    cc2, ckr2 = cc, ckr
+    for i in range(t):
+        oa, cc, ckr = mla_mod.mla_decode(cfg, p, x[:, i:i + 1],
+                                         jnp.full((b,), i), cc, ckr,
+                                         absorbed=True)
+        on, cc2, ckr2 = mla_mod.mla_decode(cfg, p, x[:, i:i + 1],
+                                           jnp.full((b,), i), cc2, ckr2,
+                                           absorbed=False)
+        np.testing.assert_allclose(np.asarray(oa), np.asarray(on),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_mla_decode_matches_full_attention():
+    cfg = _mla_cfg()
+    p = mla_mod.mla_params(KEY, cfg)
+    b, t = 1, 6
+    x = jax.random.normal(jax.random.PRNGKey(6), (b, t, 64))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    full = mla_mod.mla_attention(cfg, p, x, pos)
+    cc = jnp.zeros((b, t, cfg.kv_lora_rank))
+    ckr = jnp.zeros((b, t, cfg.qk_rope_head_dim))
+    outs = []
+    for i in range(t):
+        o, cc, ckr = mla_mod.mla_decode(cfg, p, x[:, i:i + 1],
+                                        jnp.full((b,), i), cc, ckr)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------- #
+# MoE
+# --------------------------------------------------------------------- #
+
+def _moe_cfg(**kw):
+    return _dense_cfg(moe=True, n_experts=8, top_k=2, moe_d_ff=32,
+                      n_shared_experts=1, d_ff=0, **kw)
+
+
+def test_moe_shapes_and_aux():
+    cfg = _moe_cfg()
+    p = moe_mod.moe_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 16, 64))
+    y, aux = moe_mod.moe_ffn(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux["load_balance_loss"]))
+    assert float(aux["load_balance_loss"]) >= 0.99  # >= 1 at balance
+
+
+def test_moe_capacity_drops_gracefully():
+    cfg = _moe_cfg(capacity_factor=0.1)  # tiny capacity -> heavy drops
+    p = moe_mod.moe_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (2, 32, 64))
+    y, _ = moe_mod.moe_ffn(cfg, p, x)
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_matches_dense_routing_oracle():
+    """With capacity >= tokens, slot dispatch == explicit per-token loop."""
+    cfg = _moe_cfg(capacity_factor=8.0)
+    p = moe_mod.moe_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (1, 8, 64))
+    y, _ = moe_mod.moe_ffn(cfg, p, x)
+    xf = x.reshape(8, 64)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    tw, te = jax.lax.top_k(probs, cfg.top_k)
+    tw = tw / tw.sum(-1, keepdims=True)
+    want = np.zeros((8, 64), np.float32)
+    for t in range(8):
+        for j in range(cfg.top_k):
+            e = int(te[t, j])
+            g = jax.nn.silu(xf[t] @ p["w_gate"][e]) * (xf[t] @ p["w_up"][e])
+            want[t] += float(tw[t, j]) * np.asarray(g @ p["w_down"][e])
+    sp = p["shared"]
+    shared = (jax.nn.silu(xf @ sp["w_gate"]) * (xf @ sp["w_up"])) @ sp["w_down"]
+    want = want + np.asarray(shared)
+    np.testing.assert_allclose(np.asarray(y[0]), want, rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------- #
+# Mamba2 SSD
+# --------------------------------------------------------------------- #
+
+def _ssm_cfg(chunk=8):
+    return _dense_cfg(attn_kind="none", ssm=True, ssm_state=16,
+                      ssm_head_dim=16, ssm_expand=2, ssm_chunk=chunk,
+                      d_ff=0)
+
+
+def test_ssd_chunked_equals_naive():
+    cfg = _ssm_cfg(chunk=8)
+    p = ssm_mod.ssm_params(KEY, cfg)
+    u = jax.random.normal(jax.random.PRNGKey(10), (2, 32, 64)) * 0.5
+    y_chunk = ssm_mod.ssm_forward(cfg, p, u)
+    y_naive = ssm_mod.ssm_naive(cfg, p, u)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunk_size_invariance():
+    cfg8, cfg16 = _ssm_cfg(8), _ssm_cfg(16)
+    p = ssm_mod.ssm_params(KEY, cfg8)
+    u = jax.random.normal(jax.random.PRNGKey(11), (1, 32, 64)) * 0.5
+    np.testing.assert_allclose(
+        np.asarray(ssm_mod.ssm_forward(cfg8, p, u)),
+        np.asarray(ssm_mod.ssm_forward(cfg16, p, u)), rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_matches_forward():
+    cfg = _ssm_cfg(chunk=8)
+    p = ssm_mod.ssm_params(KEY, cfg)
+    b, t = 1, 16
+    u = jax.random.normal(jax.random.PRNGKey(12), (b, t, 64)) * 0.5
+    full = ssm_mod.ssm_naive(cfg, p, u)
+    cache = ssm_mod.ssm_init_cache(cfg, b)
+    outs = []
+    for i in range(t):
+        y, cache = ssm_mod.ssm_decode(cfg, p, u[:, i:i + 1], cache)
+        outs.append(y[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------- #
+# Chunked (flash-style) attention paths
+# --------------------------------------------------------------------- #
+
+def test_sdpa_chunked_matches_dense():
+    cfg = _dense_cfg()
+    p = attn.gqa_params(KEY, cfg)
+    b, t = 2, 64
+    x = jax.random.normal(jax.random.PRNGKey(20), (b, t, 64))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q, k, v = attn._project_qkv(cfg, p, x, pos)
+    dense = attn._sdpa_dense(q, k, v, attn._mask(t, t, True, 0))
+    chunk = attn._sdpa_chunked(q, k, v, causal=True, window=0, kv_block=16)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_sdpa_chunked_with_window():
+    cfg = _dense_cfg()
+    p = attn.gqa_params(KEY, cfg)
+    b, t = 1, 48
+    x = jax.random.normal(jax.random.PRNGKey(21), (b, t, 64))
+    pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+    q, k, v = attn._project_qkv(cfg, p, x, pos)
+    dense = attn._sdpa_dense(q, k, v, attn._mask(t, t, True, 8))
+    chunk = attn._sdpa_chunked(q, k, v, causal=True, window=8, kv_block=16)
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mla_chunked_matches_dense():
+    cfg = _mla_cfg()
+    p = mla_mod.mla_params(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(22), (1, 32, 64))
+    pos = jnp.broadcast_to(jnp.arange(32), (1, 32))
+    dense = mla_mod.mla_attention(cfg, p, x, pos, chunked=False)
+    q_nope, q_rope = mla_mod._q_proj(cfg, p, x, pos)
+    c_kv, k_rope = mla_mod._kv_latent(cfg, p, x, pos)
+    out = mla_mod._mla_chunked(cfg, p, q_nope, q_rope, c_kv, k_rope,
+                               kv_block=8)
+    chunk = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    np.testing.assert_allclose(np.asarray(chunk), np.asarray(dense),
+                               rtol=2e-4, atol=2e-4)
