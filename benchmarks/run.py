@@ -22,6 +22,7 @@ MODULES = [
     "fig15_majm_success",
     "fig16_spatial_success",
     "fig17_microbenchmarks",
+    "bank_parallelism",
     "fig18_nrg_sensitivity",
     "fig19_destruction",
     "fig20_realworld",

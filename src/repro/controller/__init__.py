@@ -1,0 +1,28 @@
+"""Bank-parallel PuM memory controller (paper §7: multi-bank parallelism).
+
+Discrete-event analogue of a LiteDRAM/gram-style controller:
+
+  * :class:`~repro.controller.bank_machine.BankMachine` — per-bank FSM with
+    open-row tracking, an open/closed-page precharge policy, and a queue of
+    PuM command programs (violated-timing sequences are atomic units).
+  * :class:`~repro.controller.multiplexer.CommandMultiplexer` — round-robin +
+    refresh-priority arbiter for the shared command bus, enforcing the
+    rank-wide constraints (tFAW, tRRD, tCCD, one command per tCK).
+  * :class:`~repro.controller.refresher.Refresher` — tREFI/tRFC REF injection
+    that stalls new PuM sequences while letting in-flight ones drain.
+  * :class:`~repro.controller.controller.MemoryController` — the facade:
+    accepts ``Cmd`` programs tagged with target banks and returns a
+    cycle-accounted, ``ScheduleResult``-compatible trace.
+"""
+
+from repro.controller.bank_machine import BankMachine, BankState
+from repro.controller.controller import (BankBatchCost, ControllerTrace,
+                                         MemoryController, retarget_program)
+from repro.controller.multiplexer import CommandMultiplexer
+from repro.controller.refresher import Refresher
+
+__all__ = [
+    "BankMachine", "BankState", "CommandMultiplexer", "Refresher",
+    "MemoryController", "ControllerTrace", "BankBatchCost",
+    "retarget_program",
+]

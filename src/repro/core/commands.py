@@ -49,6 +49,15 @@ class ScheduleResult:
     n_pres: int
     n_rdwr: int
     issue_times: list[float]
+    # Parallel to ``issue_times``: the command issued at each time, so traces
+    # are auditable per command (scheduled multi-bank streams reorder across
+    # programs, so positional indexing into the input program is not enough).
+    cmds: list[Cmd] = dataclasses.field(default_factory=list)
+
+    @property
+    def events(self) -> list[tuple[Cmd, float]]:
+        """(cmd, issue_time) pairs in issue order."""
+        return list(zip(self.cmds, self.issue_times))
 
 
 class CommandScheduler:
@@ -70,6 +79,7 @@ class CommandScheduler:
         act_window: deque[float] = deque()
         last_act = -1e30
         issue_times: list[float] = []
+        issued: list[Cmd] = []
         n_acts = n_pres = n_rdwr = 0
         energy = 0.0
         for cmd in program:
@@ -90,6 +100,7 @@ class CommandScheduler:
                         earliest = window_start + t.tfaw
                         act_window.popleft()
             issue_times.append(earliest)
+            issued.append(cmd)
             last_per_bank[cmd.bank] = earliest
             now = earliest
             if cmd.op is Op.ACT:
@@ -109,7 +120,7 @@ class CommandScheduler:
         total = (issue_times[-1] if issue_times else 0.0)
         return ScheduleResult(total_ns=total, energy_j=energy, n_acts=n_acts,
                               n_pres=n_pres, n_rdwr=n_rdwr,
-                              issue_times=issue_times)
+                              issue_times=issue_times, cmds=issued)
 
 
 # ---------------------------------------------------------------------- #

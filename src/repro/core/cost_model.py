@@ -50,11 +50,19 @@ ZERO = OpCost(0.0, 0.0, 0)
 
 class CostModel:
     def __init__(self, timings: DramTimings = DDR4_2400,
-                 row_bits: int = 65536):
+                 row_bits: int = 65536, controller=None):
+        """``controller``: an optional
+        :class:`repro.controller.MemoryController`; when set, primitive
+        programs are priced through its bank-machine/multiplexer schedule
+        (identical to the sequential path for single-bank programs — the
+        equivalence is tested) and multi-bank batches can be priced with
+        :meth:`maj_unit_programs` + ``controller.batch_cost``.  ``None``
+        keeps the legacy sequential ``CommandScheduler`` path."""
         self.t = timings
         self.row_bits = row_bits
         self._wr_bursts = max(1, row_bits // 512)
         self._sched = cmds.CommandScheduler(timings)
+        self.controller = controller
         self._cache: dict[tuple, OpCost] = {}
 
     # ------------------------------------------------------------------ #
@@ -62,7 +70,10 @@ class CostModel:
     # ------------------------------------------------------------------ #
 
     def _sched_cost(self, prog) -> OpCost:
-        r = self._sched.schedule(prog)
+        if self.controller is not None:
+            r = self.controller.schedule(prog)
+        else:
+            r = self._sched.schedule(prog)
         return OpCost(r.total_ns, r.energy_j, 1)
 
     def aap(self) -> OpCost:
@@ -133,6 +144,41 @@ class CostModel:
         cost = cost + self.aap()                    # copy-out
         self._cache[key] = cost
         return cost
+
+    def maj_unit_programs(self, m: int, n_rg: int,
+                          frac_supported: bool = True,
+                          plan_style: str = "pow2",
+                          resident_inputs: int = 0,
+                          bank: int = 0) -> list[list[cmds.Cmd]]:
+        """The primitive command programs composing one MAJ-M@N_RG op, in
+        issue order — the schedulable counterpart of :meth:`maj_op` (same
+        sequence count and, scheduled back-to-back on one bank, the same
+        latency).  This is the *unit* that ``MemoryController.batch_cost``
+        replicates across banks to measure bank-parallel speedup and
+        refresh interference."""
+        rp = (plan_pow2 if plan_style == "pow2" else replication_plan)(m,
+                                                                       n_rg)
+        k = n_rg.bit_length() - 1
+        per_input, neutral_blocks = buddy_assign(m, rp.copies, rp.n_neutral,
+                                                 k)
+        t = self.t
+        progs: list[list[cmds.Cmd]] = []
+        for blocks in per_input[resident_inputs:]:
+            for _start, size in blocks:
+                progs.append(cmds.prog_aap_multi_row_init(bank, 0, 1, t))
+                if size > 1:
+                    progs.append(cmds.prog_aap_multi_row_init(bank, 0, 1, t))
+        if frac_supported:
+            progs.extend(cmds.prog_frac(bank, 0, t)
+                         for _ in range(rp.n_neutral))
+        else:
+            for _start, size in neutral_blocks:
+                progs.append(cmds.prog_aap_multi_row_init(bank, 0, 1, t))
+                if size > 1:
+                    progs.append(cmds.prog_aap_multi_row_init(bank, 0, 1, t))
+        progs.append(cmds.prog_apa_charge_share(bank, 0, 1, t))
+        progs.append(cmds.prog_aap_multi_row_init(bank, 0, 1, t))
+        return progs
 
     def fracdram_maj3(self) -> OpCost:
         """State-of-the-art baseline [26]: MAJ3 @ N=4 (1 Frac per op)."""

@@ -34,11 +34,24 @@ class EngineStats:
     energy_j: float = 0.0
     n_sequences: int = 0
     lane_efficiency: float = 1.0  # min success rate over ops used
+    refresh_stall_ns: float = 0.0  # controller-modeled REF interference
 
     def charge(self, cost: OpCost, n_vec_rows: int, banks: int,
-               success: float) -> None:
-        eff_rows = -(-n_vec_rows // banks)  # bank-level parallelism
-        self.latency_ns += cost.latency_ns * eff_rows
+               success: float, batch=None) -> None:
+        if batch is None:
+            # Legacy closed-form divide: ideal bank-level parallelism.
+            eff_rows = -(-n_vec_rows // banks)
+            self.latency_ns += cost.latency_ns * eff_rows
+        else:
+            # Controller-scheduled pricing: the measured bank-parallel
+            # speedup (tFAW/tRRD/bus-limited, <= banks) and the steady-state
+            # refresh slowdown replace the ideal divide.
+            speedup = max(1.0, batch.parallel_speedup)
+            base = max(cost.latency_ns * n_vec_rows / speedup,
+                       cost.latency_ns * (-(-n_vec_rows // banks)))
+            total = base * batch.refresh_factor
+            self.latency_ns += total
+            self.refresh_stall_ns += total - base
         self.energy_j += cost.energy_j * n_vec_rows
         self.n_sequences += cost.n_sequences * n_vec_rows
         self.lane_efficiency = min(self.lane_efficiency, success)
@@ -52,7 +65,7 @@ class PulsarEngine:
                  backend: str = "fast",
                  success_db: SuccessRateDb | None = None,
                  use_pulsar: bool = True, chained: bool = False,
-                 seed: int = 0):
+                 controller=None, seed: int = 0):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -61,10 +74,18 @@ class PulsarEngine:
         self.backend = backend
         self.use_pulsar = use_pulsar  # False => FracDRAM baseline costs
         self.chained = chained and use_pulsar  # chained-staging (§Perf P4)
-        self.cost = CostModel(row_bits=row_bits)
+        # controller="auto" builds a MemoryController over `banks` banks;
+        # None keeps the legacy closed-form bank divide (reproduces the
+        # pre-controller numbers exactly).
+        if controller == "auto":
+            from repro.controller import MemoryController
+            controller = MemoryController(n_banks=banks)
+        self.controller = controller
+        self.cost = CostModel(row_bits=row_bits, controller=controller)
         self.db = success_db or default_db()
         self.stats = EngineStats()
         self._best_cfg_cache: dict[int, tuple[int, int, float]] = {}
+        self._batch_cache: dict[tuple, object] = {}
         if backend == "sim":
             geom = DramGeometry(row_bits=min(row_bits, 2048),
                                 rows_per_subarray=512, subarrays_per_bank=2,
@@ -164,11 +185,57 @@ class PulsarEngine:
     def _n_vec_rows(self, n_elems: int) -> int:
         return -(-n_elems // self.row_bits)
 
+    def _batch_for(self, kind: str, m: int, n_rg: int):
+        """Controller-measured bank-batch cost for this op's dominant
+        primitive (the MAJ unit for compute kinds, the full-row transfer
+        program for load/store), cached per configuration."""
+        if kind in ("load", "store"):
+            key = ("io", kind)
+        else:
+            key = ("maj", m, n_rg, self.chained)
+        if key not in self._batch_cache:
+            from repro.core import commands as cmds
+            t = self.cost.t
+            if kind == "load":
+                unit = [cmds.prog_write_row(0, 0, self.cost._wr_bursts, t)]
+            elif kind == "store":
+                unit = [cmds.prog_read_row(0, 0, self.cost._wr_bursts, t)]
+            else:
+                unit = self.cost.maj_unit_programs(
+                    m, n_rg, frac_supported=self.profile.frac_supported,
+                    plan_style="pow2" if self.use_pulsar else "max",
+                    # Chained staging keeps one input resident per MAJ, so
+                    # measure bank contention on the thinner command stream.
+                    resident_inputs=1 if self.chained else 0)
+            self._batch_cache[key] = self.controller.batch_cost(unit,
+                                                                self.banks)
+        return self._batch_cache[key]
+
     def _charge(self, kind: str, n_elems: int, width: int | None = None,
                 n_planes: int | None = None) -> None:
         w = width or self.width
-        _m, _n, sr, cost = self._cfg_for(kind, w, n_planes)
-        self.stats.charge(cost, self._n_vec_rows(n_elems), self.banks, sr)
+        m, n, sr, cost = self._cfg_for(kind, w, n_planes)
+        batch = (self._batch_for(kind, m, n)
+                 if self.controller is not None else None)
+        self.stats.charge(cost, self._n_vec_rows(n_elems), self.banks, sr,
+                          batch)
+
+    def op_effective_ns(self, kind: str, width: int | None = None,
+                        n_planes: int | None = None
+                        ) -> tuple[float, float, int, int]:
+        """Amortized per-vector-row latency of one op at this engine's bank
+        count: ``(latency_ns, success_rate, maj_fan_in, n_rg)``.  With a
+        controller the latency is priced through the scheduled bank batch
+        (tFAW/tRRD-limited speedup + refresh factor); without one it is the
+        closed-form single-bank latency divided by ``banks``."""
+        w = width or self.width
+        m, n, sr, cost = self._cfg_for(kind, w, n_planes)
+        if self.controller is None:
+            return cost.latency_ns / self.banks, sr, m, n
+        b = self._batch_for(kind, m, n)
+        eff = (cost.latency_ns / max(1.0, b.parallel_speedup)
+               * b.refresh_factor)
+        return eff, sr, m, n
 
     # ------------------------------------------------------------------ #
     # Dataplane ops (fast backend: NumPy; sim backend: chip model)

@@ -36,6 +36,7 @@ class DramTimings:
     e_act: float = 0.909e-9
     e_pre: float = 0.578e-9
     e_rdwr_burst: float = 1.51e-9
+    e_ref: float = 26.3e-9   # one all-bank REF cycle (tRFC at IDD5)
 
     @property
     def t_aap(self) -> float:

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: fixed-seed fallback
+    from repro.testing import given, settings, st
 
 from repro.core.alu import BitSerialAlu
 from repro.core.chip import PulsarChip, majority_bits

@@ -2,7 +2,11 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: fixed-seed fallback
+    from repro.testing import given, settings, st
 
 from repro.core.decoder import RowDecoder, join_groups, split_groups
 from repro.core.geometry import TEST_GEOMETRY, DramGeometry

@@ -5,7 +5,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: fixed-seed fallback
+    from repro.testing import given, settings, st
 
 from repro.core.layout import from_vertical, to_vertical
 from repro.kernels import ref
