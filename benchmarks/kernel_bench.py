@@ -1,7 +1,12 @@
 """Kernel-layer microbenchmarks: wall time of the packed bit-plane ops on
 this host (jnp oracle path — the CPU execution path; the Pallas TPU kernels
 share the algorithm and are validated in interpret mode in tests).
-Derived column reports effective Gbit/s over the bitline lanes."""
+Derived column reports effective Gbit/s over the bitline lanes.
+
+Also benchmarks the engine dataplane end to end: a 16-op program through the
+eager per-op path (Python dispatch + NumPy temporaries per op) vs the fused
+lazy op-graph pipeline (one jit trace, transpose in/out once) — the §5.2
+command-stream-economy argument applied to the host dataplane."""
 
 from __future__ import annotations
 
@@ -10,9 +15,63 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Row, row, timed_us
+from repro.core.engine import PulsarEngine
 from repro.kernels import ref
 
 W = 1 << 16  # packed words per plane = 2M bitlines
+
+
+def _engine_prog16(e, a, b, c):
+    """16 engine ops (the fused-pipeline staple): logicals + ripple
+    adds/subs + popcount chained over three operands."""
+    t = e.and_(a, b)
+    t = e.xor(t, c)
+    t = e.or_(t, b)
+    t = e.add(t, a)
+    t = e.sub(t, c)
+    t = e.xor(t, b)
+    t = e.and_(t, a)
+    t = e.add(t, c)
+    t = e.or_(t, a)
+    t = e.sub(t, b)
+    t = e.xor(t, a)
+    t = e.and_(t, c)
+    t = e.add(t, b)
+    t = e.popcount(t)
+    t = e.add(t, a)
+    t = e.xor(t, c)
+    return t
+
+
+def _bench_fused_vs_eager() -> list[Row]:
+    rng = np.random.default_rng(7)
+    n = 32 * W  # one full plane set: 2M elements = 2M bitlines
+    a, b, c = (rng.integers(0, 2**32, n, dtype=np.uint64) for _ in range(3))
+
+    eager = PulsarEngine(width=32)
+    fused = PulsarEngine(width=32, fuse=True)
+
+    def run_eager():
+        return np.asarray(_engine_prog16(eager, a, b, c))
+
+    def run_fused():
+        return np.asarray(_engine_prog16(fused, a, b, c))
+
+    want = run_eager()
+    got = run_fused()  # warm-up: compiles the pipeline once
+    ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
+
+    us_e, _ = timed_us(run_eager)
+    us_f, _ = timed_us(run_fused)
+    rows = [
+        row("engine.eager_prog16", us_e,
+            f"{16 * n / us_e:.0f} M ops*elem/s (per-op dispatch, "
+            f"{n / 1e6:.0f}M lanes)"),
+        row("engine.fused_prog16", us_f,
+            f"{16 * n / us_f:.0f} M ops*elem/s ({us_e / us_f:.1f}x over "
+            f"eager; bit_exact+stats_match={ok} — §Perf F0)"),
+    ]
+    return rows
 
 
 def run() -> list[Row]:
@@ -56,4 +115,6 @@ def run() -> list[Row]:
     us, _ = timed_us(lambda: fn(v, c).block_until_ready())
     rows.append(row("kernel.charge_share32", us,
                     f"{32*W*8/us/1e3:.1f} GB/s"))
+
+    rows.extend(_bench_fused_vs_eager())
     return rows

@@ -218,9 +218,9 @@ class PulsarChip:
         if stability_mask is not None:
             flip = ~_mask_to_words(stability_mask)
             result = result ^ flip
-        for r in rows:
-            self.banks[bank, r] = result
-            self.neutral[bank, r] = False
+        idx = list(rows)
+        self.banks[bank, idx] = result
+        self.neutral[bank, idx] = False
         prog = cmds.prog_apa_charge_share(bank, rf, rs, self.timings)
         self.stats.add(f"apa_maj{n_data}", self.scheduler.schedule(prog))
         return rows
@@ -232,9 +232,9 @@ class PulsarChip:
         if self.neutral[bank, rf]:
             raise RuntimeError("Multi-RowInit source row is neutral")
         src = self.banks[bank, rf].copy()
-        for r in rows:
-            self.banks[bank, r] = src
-            self.neutral[bank, r] = False
+        idx = list(rows)
+        self.banks[bank, idx] = src
+        self.neutral[bank, idx] = False
         # rf itself keeps its value (it is in the activated set by
         # construction when rf/rs share the subarray; if not, rs-only set
         # still gets rf's data because the sense amps latched rf).
@@ -257,9 +257,9 @@ class PulsarChip:
         """Bulk-Write (§5.2.3): one WR stream drives all activated rows."""
         rows = self.decoder.activated_rows(rf, rs)
         data = np.asarray(data, np.uint32)
-        for r in rows:
-            self.banks[bank, r] = data
-            self.neutral[bank, r] = False
+        idx = list(rows)
+        self.banks[bank, idx] = data
+        self.neutral[bank, idx] = False
         prog = cmds.prog_bulk_write(bank, rf, rs, self._wr_bursts,
                                     self.timings)
         self.stats.add(f"bulk_write{len(rows)}", self.scheduler.schedule(prog))

@@ -11,11 +11,29 @@ Two coupled planes:
     paper's methodology (per-op best-throughput N_RG, stable-lane efficiency,
     optional multi-bank parallelism) so application benchmarks (Fig 20)
     report PuM latencies regardless of dataplane backend.
+
+Fused execution (``fuse=True``, backend="fast" only): dataplane ops record
+into a lazy op graph and return ``LazyArray`` handles; ``flush()`` (or any
+value access) compiles the whole graph into ONE jit'd bit-plane pipeline
+(kernels/fused_program.py) — on TPU operands transpose to vertical layout
+once, the Pallas program runs fused, outputs transpose back once; on CPU
+the same program fuses in the word domain (transposes cancel, so they are
+elided — same semantics, validated in tests). This mirrors in
+silicon what PULSAR's chained staging does in the DRAM command stream
+(§5.2): batch the op sequence, pay the staging cost once. The *cost plane
+is invariant*: every op is charged at record time exactly as in eager mode,
+so EngineStats (and fig17/fig20 numbers) are identical in both modes.
+Results are computed modulo 2**width (the vertical layout holds ``width``
+planes); operands with bits at or above ``width`` are rejected at record
+time rather than silently truncated, because eager ops compute on raw
+uint64 values (realworld's packed-bitmap kernels depend on that). mul/div
+and the sim backend fall back to eager execution.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import weakref
 
 import numpy as np
 
@@ -26,6 +44,7 @@ from repro.core.cost_model import CostModel, OpCost, ZERO
 from repro.core.geometry import DramGeometry, PAPER_MODULE
 from repro.core.profiles import PROFILES
 from repro.core.pulsar import PulsarExecutor
+from repro.kernels.fused_program import FusedOp, FusedProgram, get_pipeline
 
 
 @dataclasses.dataclass
@@ -57,6 +76,128 @@ class EngineStats:
         self.lane_efficiency = min(self.lane_efficiency, success)
 
 
+class LazyArray:
+    """Handle for a value pending in the engine's fused op graph.
+
+    Behaves like a read-only array: ``np.asarray`` (or ``materialize()``)
+    triggers ``engine.flush()`` on first access. Feeding it back into engine
+    ops extends the graph instead of materializing.
+    """
+
+    __slots__ = ("_engine", "_graph", "_op_idx", "shape", "__weakref__",
+                 "_value")
+
+    def __init__(self, engine: "PulsarEngine", graph: "_OpGraph",
+                 op_idx: int, shape: tuple):
+        self._engine = engine
+        self._graph = graph
+        self._op_idx = op_idx
+        self.shape = shape
+        self._value: np.ndarray | None = None
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return np.dtype(np.uint64)
+
+    def materialize(self) -> np.ndarray:
+        if self._value is None:
+            self._engine.flush()
+        if self._value is None:
+            raise RuntimeError(
+                "LazyArray failed to materialize: the engine flush that "
+                "should have produced it did not complete")
+        return self._value
+
+    def __array__(self, dtype=None, copy=None):
+        v = self.materialize()
+        return v.astype(dtype) if dtype is not None else v
+
+    # ndarray comparison/truth semantics, not object identity: code ported
+    # from eager mode must not silently get `False` from `t1 == t2`.
+    def __eq__(self, other):
+        return self.materialize() == np.asarray(other)
+
+    def __ne__(self, other):
+        return self.materialize() != np.asarray(other)
+
+    __hash__ = None  # unhashable, like ndarray
+
+    def __bool__(self):
+        return bool(self.materialize())
+
+    def __repr__(self) -> str:
+        state = "pending" if self._value is None else "materialized"
+        return f"LazyArray(shape={self.shape}, {state})"
+
+
+class _OpGraph:
+    """Recording buffer for one fused program: leaf operand arrays plus the
+    op list, with weakrefs to the handed-out LazyArrays (ops whose handle
+    died unreferenced are dead code — never materialized)."""
+
+    def __init__(self, n: int, width: int):
+        self.n = n                      # element count (all values)
+        self.width = width
+        self.leaves: list[np.ndarray] = []
+        self._leaf_ids: dict[int, int] = {}
+        self._pins: list[np.ndarray] = []  # keep id() keys alive (below)
+        self._fps: list[np.ndarray] = []   # content fingerprints (below)
+        self._fp_idx = np.linspace(0, n - 1, min(n, 257)).astype(np.int64)
+        self.ops: list[tuple[str, tuple, int]] = []  # (opcode, args, param)
+        self.results: list = []         # weakref per op
+
+    def leaf_id(self, arr: np.ndarray) -> tuple[str, int]:
+        """Register an operand, snapshotting its content (mod 2**32 — the
+        pipeline keeps planes[:width]): the graph must not alias caller
+        buffers, or mutations between record and flush would silently
+        diverge from eager results. Re-feeding the same array object dedups
+        to one pipeline input, guarded by a sampled content fingerprint so
+        an in-place mutation between two recorded uses registers a fresh
+        leaf instead of reusing the stale snapshot. (The guard samples 257
+        positions; a mutation confined to unsampled elements can still
+        alias — call flush() before mutating operands in place.)"""
+        key = id(arr)
+        flat = arr.ravel()
+        idx = self._leaf_ids.get(key)
+        if idx is not None and np.array_equal(flat[self._fp_idx],
+                                              self._fps[idx]):
+            return ("leaf", idx)
+        if self.width < 64 and flat.size \
+                and int(flat.max()) >> self.width:
+            # Loud, not silent: eager ops compute on raw uint64 values
+            # (realworld's packed-bitmap kernels rely on that), so
+            # truncating here would quietly change their answers.
+            raise ValueError(
+                f"fused dataplane computes modulo 2**{self.width}; an "
+                f"operand has bits at or above bit {self.width} — mask "
+                f"inputs to the engine width or use fuse=False")
+        i = len(self.leaves)
+        self._leaf_ids[key] = i  # latest content owns the dedup slot
+        self.leaves.append(flat.astype(np.uint32))
+        self._fps.append(flat[self._fp_idx])
+        # Pin the original: the id() dedup key is only valid while the
+        # caller's array stays alive.
+        self._pins.append(arr)
+        return ("leaf", i)
+
+    def add_op(self, opcode: str, args: tuple, param: int,
+               out: "LazyArray") -> int:
+        self.ops.append((opcode, args, param))
+        self.results.append(weakref.ref(out))
+        return len(self.ops) - 1
+
+
 class PulsarEngine:
     """Bulk bitwise/bit-serial integer SIMD on (simulated) PuM DRAM."""
 
@@ -65,7 +206,7 @@ class PulsarEngine:
                  backend: str = "fast",
                  success_db: SuccessRateDb | None = None,
                  use_pulsar: bool = True, chained: bool = False,
-                 controller=None, seed: int = 0):
+                 controller=None, seed: int = 0, fuse: bool = False):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -86,6 +227,12 @@ class PulsarEngine:
         self.stats = EngineStats()
         self._best_cfg_cache: dict[int, tuple[int, int, float]] = {}
         self._batch_cache: dict[tuple, object] = {}
+        if fuse and backend != "fast":
+            raise ValueError("fuse=True requires backend='fast'")
+        if fuse and width > 32:
+            raise ValueError("fused pipeline supports width <= 32")
+        self.fuse = fuse
+        self._graph: _OpGraph | None = None
         if backend == "sim":
             geom = DramGeometry(row_bits=min(row_bits, 2048),
                                 rows_per_subarray=512, subarrays_per_bank=2,
@@ -238,68 +385,165 @@ class PulsarEngine:
         return eff, sr, m, n
 
     # ------------------------------------------------------------------ #
-    # Dataplane ops (fast backend: NumPy; sim backend: chip model)
+    # Dataplane ops (fast backend: NumPy; sim backend: chip model;
+    # fuse=True: record into the lazy op graph, execute at flush())
     # ------------------------------------------------------------------ #
 
     def _mask(self, w: int) -> np.uint64:
         return np.uint64((1 << w) - 1)
 
+    def _coerce(self, x):
+        """Engine-op operand: LazyArrays pass through while pending (so the
+        graph extends); everything else becomes a uint64 ndarray."""
+        if isinstance(x, LazyArray):
+            return x if x._value is None else x._value
+        return np.asarray(x, np.uint64)
+
+    def _force(self, x) -> np.ndarray:
+        return x.materialize() if isinstance(x, LazyArray) else x
+
+    def _can_fuse(self, *operands) -> bool:
+        if not self.fuse:
+            return False
+        shape = operands[0].shape
+        return all(x.shape == shape for x in operands[1:])
+
+    def _record(self, opcode: str, operands: tuple, param: int = 0
+                ) -> LazyArray:
+        """Append one op to the lazy graph (starting/flushing as needed)
+        and hand back its LazyArray."""
+        n, shape = operands[0].size, operands[0].shape
+        g = self._graph
+        if g is not None and g.n != n:
+            self.flush()  # one program = one element count
+            g = None
+        if g is None:
+            g = self._graph = _OpGraph(n, self.width)
+        args = []
+        for x in operands:
+            if isinstance(x, LazyArray) and x._value is None \
+                    and x._graph is g:
+                args.append(("op", x._op_idx))
+            else:
+                # Anything else — plain array, already-materialized lazy,
+                # or a pending lazy of ANOTHER graph/engine (materialize()
+                # flushes through its own engine) — enters as a leaf.
+                arr = x.materialize() if isinstance(x, LazyArray) else x
+                args.append(g.leaf_id(arr))
+        out = LazyArray(self, g, len(g.ops), shape)
+        g.add_op(opcode, tuple(args), param, out)
+        return out
+
+    def flush(self) -> None:
+        """Materialize the pending op graph through the fused bit-plane
+        pipeline (one transpose in, one fused program, one transpose out).
+        No-op when nothing is pending; never touches the cost plane — every
+        op was charged at record time."""
+        g, self._graph = self._graph, None
+        if g is None or not g.ops:
+            return
+        live = [wr() for wr in g.results]
+        # Materialize ops whose handle is still referenced; handles that
+        # died unreferenced are dead code (their cost was still charged,
+        # as in eager mode, but no dataplane work remains).
+        out_idx = [i for i, lz in enumerate(live) if lz is not None]
+        if not out_idx:
+            return
+        n_leaves = len(g.leaves)
+
+        def vid(tag):  # combined id space: leaves first, then ops
+            return tag[1] if tag[0] == "leaf" else n_leaves + tag[1]
+
+        program = FusedProgram(
+            width=self.width, n_inputs=n_leaves,
+            ops=tuple(FusedOp(opcode, tuple(vid(a) for a in args), param)
+                      for opcode, args, param in g.ops),
+            outputs=tuple(n_leaves + i for i in out_idx))
+        pad = (-g.n) % 32
+        leaves = []
+        for flat in g.leaves:  # uint32 snapshots (see _OpGraph.leaf_id)
+            if pad:
+                flat = np.pad(flat, (0, pad))
+            leaves.append(flat.view(np.int32))
+        try:
+            outs = get_pipeline(program)(*leaves)
+        except BaseException:
+            # Keep pending handles recoverable after a transient failure
+            # (interrupt, backend OOM): restore the graph so a later
+            # flush/materialize can retry instead of orphaning them.
+            self._graph = g
+            raise
+        for i, out in zip(out_idx, outs):
+            lz = live[i]
+            val = np.asarray(out).view(np.uint32).astype(np.uint64)
+            lz._value = val[:g.n].reshape(lz.shape)
+            # A materialized handle never needs the graph again — drop the
+            # references so surviving handles don't pin the leaf snapshots
+            # (or the engine) for their lifetime.
+            lz._graph = None
+            lz._engine = None
+
+    def _binary(self, kind: str, opcode: str, a, b, np_fn):
+        """kind prices the op (cost plane); opcode names it in the fused
+        ISA and the sim-backend ALU dispatch."""
+        a, b = self._coerce(a), self._coerce(b)
+        self._charge(kind, a.size)
+        if self._can_fuse(a, b):
+            return self._record(opcode, (a, b))
+        return self._run2(opcode, self._force(a), self._force(b), np_fn)
+
     def and_(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
-        self._charge("and2", a.size)
-        return self._run2("and", a, b, lambda x, y: x & y)
+        return self._binary("and2", "and", a, b, lambda x, y: x & y)
 
     def or_(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
-        self._charge("or2", a.size)
-        return self._run2("or", a, b, lambda x, y: x | y)
+        return self._binary("or2", "or", a, b, lambda x, y: x | y)
 
     def xor(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
-        self._charge("xor2", a.size)
-        return self._run2("xor", a, b, lambda x, y: x ^ y)
+        return self._binary("xor2", "xor", a, b, lambda x, y: x ^ y)
 
     def add(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
-        self._charge("add", a.size)
-        return self._run2("add", a, b,
-                          lambda x, y: (x + y) & self._mask(self.width))
+        return self._binary("add", "add", a, b,
+                            lambda x, y: (x + y) & self._mask(self.width))
 
     def sub(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
-        self._charge("add", a.size)
-        return self._run2("sub", a, b,
-                          lambda x, y: (x - y) & self._mask(self.width))
+        return self._binary("add", "sub", a, b,
+                            lambda x, y: (x - y) & self._mask(self.width))
 
-    def mul(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+    def mul(self, a, b):  # not in the fused ISA: eager fallback
+        a, b = self._force(self._coerce(a)), self._force(self._coerce(b))
         self._charge("mul", a.size)
         return self._run2("mul", a, b,
                           lambda x, y: (x * y) & self._mask(self.width))
 
-    def div(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+    def div(self, a, b):  # not in the fused ISA: eager fallback
+        a, b = self._force(self._coerce(a)), self._force(self._coerce(b))
         self._charge("div", a.size)
         return self._run2("div", a, b, lambda x, y: x // y)
 
     def less_than(self, a, b):
-        a, b = np.asarray(a, np.uint64), np.asarray(b, np.uint64)
+        a, b = self._coerce(a), self._coerce(b)
         self._charge("compare", a.size)
-        return (a < b).astype(np.uint64)
+        if self._can_fuse(a, b):
+            return self._record("less", (a, b))
+        return (self._force(a) < self._force(b)).astype(np.uint64)
 
     def popcount(self, a, width: int | None = None):
-        a = np.asarray(a, np.uint64)
+        a = self._coerce(a)
         w = width or self.width
         self._charge("popcount", a.size, n_planes=w)
-        return np.array([bin(int(x)).count("1") for x in a.ravel()],
-                        np.uint64).reshape(a.shape) if a.size < 4096 else \
-            _vec_popcount(a)
+        if self._can_fuse(a):
+            return self._record("popcount", (a,))
+        return _vec_popcount(self._force(a))
 
     def reduce_bits(self, a, kind: str, width: int | None = None):
         """Per-element AND/OR/XOR reduction across the element's bits."""
-        a = np.asarray(a, np.uint64)
+        a = self._coerce(a)
         w = width or self.width
         self._charge(f"reduce_{kind}", a.size, n_planes=w)
+        if self._can_fuse(a):
+            return self._record(f"reduce_{kind}", (a,),
+                                param=w if kind == "and" else 0)
+        a = self._force(a)
         if kind == "and":
             return (a == self._mask(w)).astype(np.uint64)
         if kind == "or":
@@ -332,10 +576,17 @@ class PulsarEngine:
         self.stats = EngineStats()
 
 
+_M1 = np.uint64(0x5555555555555555)
+_M2 = np.uint64(0x3333333333333333)
+_M4 = np.uint64(0x0F0F0F0F0F0F0F0F)
+_H01 = np.uint64(0x0101010101010101)
+
+
 def _vec_popcount(a: np.ndarray) -> np.ndarray:
-    a = a.astype(np.uint64)
-    out = np.zeros_like(a)
-    while a.any():
-        out += a & np.uint64(1)
-        a = a >> np.uint64(1)
-    return out
+    """Fixed-iteration SWAR popcount (Hacker's Delight 5-2): 12 vector ops
+    regardless of data, replacing the data-dependent shift loop."""
+    a = np.asarray(a, np.uint64).copy()
+    a -= (a >> np.uint64(1)) & _M1
+    a = (a & _M2) + ((a >> np.uint64(2)) & _M2)
+    a = (a + (a >> np.uint64(4))) & _M4
+    return (a * _H01) >> np.uint64(56)

@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Public dispatch surface (TPU: Pallas; CPU: jnp oracle — see ops.py):
+
+from repro.kernels.fused_program import (FusedOp, FusedProgram,  # noqa: F401
+                                         get_pipeline)
+from repro.kernels.ops import (bit_transpose32, bitserial_add,  # noqa: F401
+                               charge_share, maj_n, run_fused_program)

@@ -1,0 +1,308 @@
+"""Fused bit-plane program compiler: one trace for a whole op graph.
+
+PULSAR's performance case is command-stream economy — many-input MAJ and
+Multi-RowInit collapse chains of per-op activations into one fused sequence
+(§5.2). This module is the dataplane mirror of that argument: instead of the
+engine dispatching every op through Python with its own layout conversion
+and intermediate materialization, a recorded op sequence (``FusedProgram``)
+compiles into a *single* ``jax.jit`` trace that
+
+  1. transposes each operand horizontal -> vertical ONCE (bit_transpose32),
+  2. evaluates the whole program on bit-planes (intermediates stay in
+     registers/fusion scope — XLA sees one elementwise DAG),
+  3. transposes the requested outputs back ONCE.
+
+The same program IR runs in three backends, all bit-exact against each
+other (tests/kernels):
+
+  * ``run_program_pallas`` — Pallas kernel sharing the ``BLOCK_WORDS``
+    (8, 128) tiling of maj_n / bitserial_add: the full program executes per
+    VMEM-resident block, so N ops cost one HBM round-trip instead of N.
+  * ``run_program_ref`` — the vertical jnp oracle (semantics anchor,
+    validates the Pallas kernel in interpret mode).
+  * ``run_program_words`` — horizontal word-domain jnp evaluator: the CPU
+    execution path. On a scalar ISA the vertical form loses ~10x (a ripple
+    add is 32 dependent plane passes vs one hardware add), and the two
+    bit_transpose32 calls bracketing the program cancel algebraically —
+    so the CPU pipeline elides the layout conversion entirely and fuses
+    the whole graph in the word domain (same elimination of per-op
+    dispatch/materialization, minus the transposes). This is the same
+    CPU-vs-TPU dispatch split ops.py applies to every kernel.
+
+Programs are frozen/hashable, so compiled pipelines are cached on graph
+*structure*: re-recording the same op sequence over new batches reuses the
+trace (jax.jit additionally caches per operand shape).
+
+Value semantics: elements are unsigned, width-bit (everything is computed
+modulo 2**width — the vertical layout physically holds ``width`` planes).
+Opcodes: and/or/xor (plane-wise), add/sub (ripple carry/borrow),
+less (unsigned compare -> 0/1), popcount (adder tree over the element's
+planes), reduce_and(param=w) (== mask(w)), reduce_or (!= 0), reduce_xor
+(parity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
+
+LANE = 128
+SUBLANE = 8
+BLOCK_WORDS = SUBLANE * LANE  # one (8, 128) int32 tile per grid step
+
+OPCODES = ("and", "or", "xor", "add", "sub", "less", "popcount",
+           "reduce_and", "reduce_or", "reduce_xor")
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedOp:
+    """One instruction: ``args`` are value ids in the program's combined id
+    space (leaf inputs 0..n_inputs-1, then op results in program order)."""
+    opcode: str
+    args: tuple[int, ...]
+    param: int = 0  # reduce_and: the eager path's mask width w
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedProgram:
+    """A straight-line bit-plane program (hashable == pipeline cache key)."""
+    width: int
+    n_inputs: int
+    ops: tuple[FusedOp, ...]
+    outputs: tuple[int, ...]  # value ids to materialize
+
+
+def eval_fused_ops(program: FusedProgram, env: list) -> list:
+    """Evaluate ``program`` over ``env`` (list of plane-list values, leaves
+    first), appending one value per op. Pure jnp on whatever array type the
+    planes are — traces identically under jax.jit and inside a Pallas body.
+    """
+    width = program.width
+    zero = jnp.zeros_like(env[0][0])
+    for op in program.ops:
+        xs = [env[a] for a in op.args]
+        env.append(_apply_op(op, xs, width, zero))
+    return env
+
+
+def _apply_op(op: FusedOp, xs: list, width: int, zero):
+    def scalar(plane):  # 0/1 result plane -> width-plane value
+        return [plane] + [zero] * (width - 1)
+
+    if op.opcode == "and":
+        return [a & b for a, b in zip(xs[0], xs[1])]
+    if op.opcode == "or":
+        return [a | b for a, b in zip(xs[0], xs[1])]
+    if op.opcode == "xor":
+        return [a ^ b for a, b in zip(xs[0], xs[1])]
+    if op.opcode == "add":
+        return ref.plane_add(xs[0], xs[1])
+    if op.opcode == "sub":
+        return ref.plane_sub(xs[0], xs[1])[0]
+    if op.opcode == "less":
+        return scalar(ref.plane_sub(xs[0], xs[1])[1])
+    if op.opcode == "popcount":
+        counts = ref.plane_popcount(xs[0])
+        return (counts + [zero] * width)[:width]
+    if op.opcode == "reduce_and":
+        # Eager semantics: value == mask(w). Bits below w must all be set,
+        # bits at/above w must all be clear (values are width-bit).
+        w = min(op.param or width, width)
+        if op.param and op.param > width:
+            return scalar(zero)  # mask(w) > any width-bit value
+        low = ref.plane_reduce(xs[0][:w], "and")
+        if w < width:
+            low = low & ~ref.plane_reduce(xs[0][w:], "or")
+        return scalar(low)
+    if op.opcode == "reduce_or":
+        return scalar(ref.plane_reduce(xs[0], "or"))
+    if op.opcode == "reduce_xor":
+        return scalar(ref.plane_reduce(xs[0], "xor"))
+    raise KeyError(op.opcode)
+
+
+# --------------------------------------------------------------------- #
+# jnp runner (CPU path / oracle)
+# --------------------------------------------------------------------- #
+
+
+def run_program_ref(program: FusedProgram, x: jax.Array) -> jax.Array:
+    """x: [n_inputs, width, W] int32 plane stacks -> [n_out, width, W]."""
+    env = [[x[i, j] for j in range(program.width)]
+           for i in range(program.n_inputs)]
+    env = eval_fused_ops(program, env)
+    return jnp.stack([jnp.stack(env[v]) for v in program.outputs])
+
+
+# --------------------------------------------------------------------- #
+# Horizontal word-domain evaluator (CPU execution path)
+# --------------------------------------------------------------------- #
+
+
+def _word_popcount(x: jax.Array) -> jax.Array:
+    """SWAR popcount on uint32 words (Hacker's Delight 5-2)."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def _apply_word_op(op: FusedOp, xs: list, width: int,
+                   mask: jax.Array) -> jax.Array:
+    if op.opcode == "and":
+        return xs[0] & xs[1]
+    if op.opcode == "or":
+        return xs[0] | xs[1]
+    if op.opcode == "xor":
+        return xs[0] ^ xs[1]
+    if op.opcode == "add":
+        return (xs[0] + xs[1]) & mask
+    if op.opcode == "sub":
+        return (xs[0] - xs[1]) & mask
+    if op.opcode == "less":
+        return (xs[0] < xs[1]).astype(jnp.uint32)
+    if op.opcode == "popcount":
+        return _word_popcount(xs[0])
+    if op.opcode == "reduce_and":
+        w = op.param or width
+        if w > 32:  # mask(w) exceeds any width-bit value
+            return jnp.zeros_like(xs[0])
+        return (xs[0] == jnp.uint32((1 << w) - 1)).astype(jnp.uint32)
+    if op.opcode == "reduce_or":
+        return (xs[0] != 0).astype(jnp.uint32)
+    if op.opcode == "reduce_xor":
+        return _word_popcount(xs[0]) & jnp.uint32(1)
+    raise KeyError(op.opcode)
+
+
+def run_program_words(program: FusedProgram, leaves: list) -> tuple:
+    """Same program, horizontal layout: leaves are flat uint32 word arrays
+    (element i = word i), returns one array per program output. Operands
+    are masked to ``width`` bits on entry — identical value semantics to
+    the vertical evaluators (everything is modulo 2**width)."""
+    mask = jnp.uint32((1 << program.width) - 1)
+    env = [x & mask for x in leaves]
+    for op in program.ops:
+        env.append(_apply_word_op(op, [env[a] for a in op.args],
+                                  program.width, mask))
+    return tuple(env[v] for v in program.outputs)
+
+
+# --------------------------------------------------------------------- #
+# Pallas variant (BLOCK_WORDS tiling, whole program per VMEM block)
+# --------------------------------------------------------------------- #
+
+
+def _program_kernel(x_ref, o_ref, *, program: FusedProgram):
+    env = [[x_ref[i, j] for j in range(program.width)]
+           for i in range(program.n_inputs)]
+    env = eval_fused_ops(program, env)
+    for t, vid in enumerate(program.outputs):
+        for j in range(program.width):
+            o_ref[t, j] = env[vid][j]
+
+
+@functools.partial(jax.jit, static_argnames=("program", "interpret"))
+def run_program_pallas(program: FusedProgram, x: jax.Array,
+                       interpret: bool = False) -> jax.Array:
+    """Pallas execution of ``run_program_ref``: same [n_in, width, W] ->
+    [n_out, width, W] contract, program evaluated per (8, 128) block."""
+    n_in, width, w = x.shape
+    pad = (-w) % BLOCK_WORDS
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, pad))).astype(jnp.int32)
+    blocks = xp.shape[2] // BLOCK_WORDS
+    xb = xp.reshape(n_in, width, blocks, SUBLANE, LANE)
+    n_out = len(program.outputs)
+    out = pl.pallas_call(
+        functools.partial(_program_kernel, program=program),
+        grid=(blocks,),
+        in_specs=[pl.BlockSpec((n_in, width, 1, SUBLANE, LANE),
+                               lambda i: (0, 0, i, 0, 0))],
+        out_specs=pl.BlockSpec((n_out, width, 1, SUBLANE, LANE),
+                               lambda i: (0, 0, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_out, width, blocks, SUBLANE, LANE),
+                                       jnp.int32),
+        interpret=interpret,
+    )(xb)
+    return out.reshape(n_out, width, blocks * BLOCK_WORDS)[:, :, :w] \
+        .astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# End-to-end pipeline: pack -> run -> unpack, one jit trace, cached
+# --------------------------------------------------------------------- #
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def get_pipeline(program: FusedProgram, force_pallas: bool = False,
+                 interpret: bool = False, force_vertical: bool = False):
+    """Compiled callable for ``program``: ``fn(*leaves) -> tuple(outs)``.
+
+    Leaves are flat [n] int32 arrays of packed horizontal words (element i
+    = word i), n a multiple of 32; outputs likewise. One jit trace end to
+    end. On TPU (or ``force_pallas``) operands bit-transpose to vertical
+    layout once, the Pallas program runs fused, outputs transpose back
+    once; on CPU the word-domain evaluator runs (``force_vertical`` keeps
+    the transpose+planes form for validation). Cached on (program
+    structure, backend); jit handles per-shape specialization.
+    """
+    return _cached_pipeline(program, force_pallas or _on_tpu(), interpret,
+                            force_vertical)
+
+
+@functools.lru_cache(maxsize=256)  # bounded: one jit callable per structure
+def _cached_pipeline(program: FusedProgram, use_pallas: bool,
+                     interpret: bool, force_vertical: bool):
+    return _build_pipeline(program, use_pallas, interpret, force_vertical)
+
+
+def _build_pipeline(program: FusedProgram, use_pallas: bool,
+                    interpret: bool, force_vertical: bool):
+    width = program.width
+    if not use_pallas and not force_vertical:
+        @jax.jit
+        def word_pipeline(*leaves):
+            outs = run_program_words(
+                program,
+                [jax.lax.bitcast_convert_type(x, jnp.uint32)
+                 for x in leaves])
+            return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
+                         for o in outs)
+        return word_pipeline
+
+    if use_pallas:
+        interp = interpret or not _on_tpu()
+        transpose = functools.partial(_pl_transpose, interpret=interp)
+        run = functools.partial(run_program_pallas, program,
+                                interpret=interp)
+    else:
+        transpose = ref.bit_transpose32
+        run = functools.partial(run_program_ref, program)
+
+    def pack(words):  # [32g] horizontal words -> [width, g] planes
+        g = words.shape[0] // 32
+        return transpose(words.reshape(g, 32).T)[:width]
+
+    def unpack(planes):  # [width, g] planes -> [32g] horizontal words
+        g = planes.shape[1]
+        if width < 32:
+            planes = jnp.concatenate(
+                [planes, jnp.zeros((32 - width, g), planes.dtype)])
+        return transpose(planes).T.reshape(32 * g)
+
+    @jax.jit
+    def pipeline(*leaves):
+        stack = jnp.stack([pack(leaf) for leaf in leaves])
+        outs = run(stack)
+        return tuple(unpack(outs[t]) for t in range(outs.shape[0]))
+
+    return pipeline

@@ -14,6 +14,8 @@ from repro.kernels import ref
 from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
 from repro.kernels.bitserial_add import bitserial_add as _pl_add
 from repro.kernels.charge_share import charge_share as _pl_cs
+from repro.kernels.fused_program import (FusedProgram, run_program_pallas,
+                                         run_program_ref)
 from repro.kernels.maj_n import maj_n as _pl_maj
 
 
@@ -47,3 +49,17 @@ def charge_share(v, caps, *, vdd: float, c_bl: float,
         return _pl_cs(v, caps, vdd=vdd, c_bl=c_bl,
                       interpret=interpret or not _on_tpu())
     return ref.charge_share(v, caps, vdd=vdd, c_bl=c_bl)
+
+
+def run_fused_program(program: FusedProgram, x, force_pallas: bool = False,
+                      interpret: bool = False):
+    """Evaluate a fused program on *vertical plane stacks*: x [n_in, width,
+    W] int32 -> [n_out, width, W]. Like the other wrappers here, the CPU
+    fallback is the jnp oracle (validation form). Callers holding flat
+    horizontal operands — the engine's flush() — should use
+    ``fused_program.get_pipeline`` instead: on CPU it switches to the
+    word-domain evaluator, which is the actual speed path."""
+    if _on_tpu() or force_pallas:
+        return run_program_pallas(program, x,
+                                  interpret=interpret or not _on_tpu())
+    return run_program_ref(program, x)

@@ -105,3 +105,85 @@ def charge_share(v: jax.Array, caps: jax.Array, *, vdd: float,
 def multi_row_broadcast(src: jax.Array, n: int) -> jax.Array:
     """Multi-RowInit dataplane: one row plane -> n identical planes."""
     return jnp.broadcast_to(src[None], (n,) + src.shape)
+
+
+# --------------------------------------------------------------------- #
+# Vertical-layout plane algebra (fused-program building blocks)
+#
+# A *value* is a list of ``width`` same-shaped integer bit-plane arrays
+# (plane j = bit j of every element). These helpers are pure jnp on the
+# plane lists, so the same code traces inside a jax.jit pipeline AND
+# inside a Pallas kernel body (kernels/fused_program.py uses both).
+# --------------------------------------------------------------------- #
+
+
+def _full_add(x, y, carry):
+    """One full-adder plane step: (sum, carry-out); carry may be None
+    (treated as zero without emitting ops)."""
+    axb = x ^ y
+    s = axb if carry is None else axb ^ carry
+    c = x & y
+    return s, (c if carry is None else c | (carry & axb))
+
+
+def plane_add(a: list, b: list) -> list:
+    """Ripple add, modulo 2^width (carry-out dropped): the fused form of
+    bitserial_add on value lists."""
+    out, carry = [], None
+    for x, y in zip(a, b):
+        s, carry = _full_add(x, y, carry)
+        out.append(s)
+    return out
+
+
+def plane_sub(a: list, b: list) -> tuple[list, jax.Array]:
+    """Borrow-ripple subtract modulo 2^width. Returns (difference planes,
+    final borrow plane) — the borrow is the unsigned a < b predicate."""
+    out, borrow = [], None
+    for x, y in zip(a, b):
+        xxy = x ^ y
+        out.append(xxy if borrow is None else xxy ^ borrow)
+        nb = ~x & y
+        borrow = nb if borrow is None else nb | (borrow & ~xxy)
+    return out, borrow
+
+
+def plane_popcount(planes: list) -> list:
+    """Per-element popcount over ``planes`` (each a 1-bit vertical number):
+    pairwise carry-save adder tree -> ceil(log2(n+1)) count planes."""
+    nums = [[p] for p in planes]
+    while len(nums) > 1:
+        nxt = []
+        for i in range(0, len(nums) - 1, 2):
+            a, b = nums[i], nums[i + 1]
+            out, carry = [], None
+            for j in range(max(len(a), len(b))):
+                x = a[j] if j < len(a) else None
+                y = b[j] if j < len(b) else None
+                if y is None:
+                    x, y = y, x
+                if x is None:  # single operand + carry: half add
+                    if carry is None:
+                        out.append(y)
+                    else:
+                        out.append(y ^ carry)
+                        carry = y & carry
+                else:
+                    s, carry = _full_add(x, y, carry)
+                    out.append(s)
+            if carry is not None:
+                out.append(carry)
+            nxt.append(out)
+        if len(nums) % 2:
+            nxt.append(nums[-1])
+        nums = nxt
+    return nums[0]
+
+
+def plane_reduce(planes: list, kind: str) -> jax.Array:
+    """AND/OR/XOR fold across an element's planes -> one 0/1 plane."""
+    acc = planes[0]
+    for p in planes[1:]:
+        acc = acc & p if kind == "and" else \
+            acc | p if kind == "or" else acc ^ p
+    return acc

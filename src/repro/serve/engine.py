@@ -51,6 +51,11 @@ class ServeEngine:
         self.cur_token = np.zeros(max_batch, np.int32)
         self._decode = jax.jit(
             lambda p, c, t, q: decode_step(cfg, p, c, t, q))
+        # One cached prefill closure for the engine's lifetime: a fresh
+        # jax.jit per admission would recompile every request even at
+        # identical prompt shapes.
+        self._prefill = jax.jit(
+            lambda p, b: prefill(cfg, p, b, max_len))
         self.queue: list[Request] = []
         self.finished: list[Request] = []
 
@@ -71,8 +76,7 @@ class ServeEngine:
                 break
             req = self.queue.pop(0)
             t = len(req.prompt)
-            logits, caches_b1, _ = jax.jit(
-                lambda p, b: prefill(self.cfg, p, b, self.max_len))(
+            logits, caches_b1, _ = self._prefill(
                 self.params, {"tokens": jnp.asarray(req.prompt)[None]})
 
             # Copy the single-request cache into this slot of the batch

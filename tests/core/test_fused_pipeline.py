@@ -1,0 +1,352 @@
+"""Fused dataplane (engine fuse=True) vs eager: bit-exactness and
+cost-plane invariance, across widths and random op sequences."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: fixed-seed fallback
+    from repro.testing import given, settings, st
+
+from repro.core.engine import LazyArray, PulsarEngine, _vec_popcount
+from repro.kernels import fused_program
+
+pytestmark = pytest.mark.fused
+
+# Chain ops: (engine method, n_operands). Applied as t = op(t, pool[i]).
+_CHAIN_OPS = ["and", "or", "xor", "add", "sub"]
+_TAIL_OPS = ["less", "popcount", "reduce_and", "reduce_or", "reduce_xor"]
+
+
+def _rand_inputs(width, n, seed):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 1 << width, n, dtype=np.uint64)
+            for _ in range(3)]
+
+
+def _apply(e, name, t, other):
+    if name == "and":
+        return e.and_(t, other)
+    if name == "or":
+        return e.or_(t, other)
+    if name == "xor":
+        return e.xor(t, other)
+    if name == "add":
+        return e.add(t, other)
+    if name == "sub":
+        return e.sub(t, other)
+    if name == "less":
+        return e.less_than(t, other)
+    if name == "popcount":
+        return e.popcount(t)
+    if name.startswith("reduce_"):
+        return e.reduce_bits(t, name.removeprefix("reduce_"))
+    raise KeyError(name)
+
+
+def _run_sequence(e, inputs, op_seq):
+    """Random chain over the input pool; returns every intermediate (so
+    flush must materialize intermediates whose handles stay alive)."""
+    outs = []
+    t = inputs[0]
+    for i, name in enumerate(op_seq):
+        t = _apply(e, name, t, inputs[(i + 1) % len(inputs)])
+        outs.append(t)
+    return [np.asarray(o, np.uint64) for o in outs]
+
+
+@given(width=st.sampled_from([8, 16, 32]), seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_fused_matches_eager_random_sequence(width, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(33, 400))  # deliberately not a multiple of 32
+    inputs = _rand_inputs(width, n, seed)
+    n_ops = int(rng.integers(2, 7))
+    op_seq = [str(rng.choice(_CHAIN_OPS)) for _ in range(n_ops - 1)]
+    op_seq.append(str(rng.choice(_CHAIN_OPS + _TAIL_OPS)))
+
+    eager = PulsarEngine(width=width)
+    fused = PulsarEngine(width=width, fuse=True)
+    want = _run_sequence(eager, inputs, op_seq)
+    got = _run_sequence(fused, inputs, op_seq)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert eager.stats == fused.stats
+
+
+@pytest.mark.parametrize("width", [8, 16, 32])
+def test_fused_all_opcodes_bit_exact(width):
+    inputs = _rand_inputs(width, 256, seed=width)
+    seq = ["and", "xor", "or", "add", "sub", "less"]
+    tails = ["popcount", "reduce_and", "reduce_or", "reduce_xor"]
+    eager = PulsarEngine(width=width)
+    fused = PulsarEngine(width=width, fuse=True)
+
+    def run(e):
+        outs = _run_sequence(e, inputs, seq)
+        base = e.add(inputs[0], inputs[1])
+        outs += [np.asarray(_apply(e, t, base, None), np.uint64)
+                 for t in tails]
+        return outs
+
+    for w, g in zip(run(eager), run(fused)):
+        np.testing.assert_array_equal(w, g)
+    assert eager.stats == fused.stats
+
+
+def test_cost_plane_invariance_with_controller():
+    """EngineStats must match eager exactly under controller pricing too
+    (latency, energy, sequences, refresh stalls)."""
+    inputs = _rand_inputs(32, 128, seed=3)
+    seq = ["add", "xor", "sub", "and", "popcount"]
+    eager = PulsarEngine(width=32, controller="auto")
+    fused = PulsarEngine(width=32, controller="auto", fuse=True)
+    for w, g in zip(_run_sequence(eager, inputs, seq),
+                    _run_sequence(fused, inputs, seq)):
+        np.testing.assert_array_equal(w, g)
+    assert eager.stats == fused.stats
+    assert fused.stats.refresh_stall_ns > 0
+
+
+def test_charges_accrue_at_record_time():
+    """The cost plane must not wait for flush(): recording IS charging."""
+    import dataclasses
+    e = PulsarEngine(fuse=True)
+    a = _rand_inputs(32, 64, seed=5)[0]
+    t = e.add(a, a)
+    assert e.stats.latency_ns > 0 and e.stats.n_sequences > 0
+    before = dataclasses.replace(e.stats)
+    _ = np.asarray(t)  # flush: dataplane only
+    assert e.stats == before
+
+
+def test_lazy_array_api_and_flush():
+    e = PulsarEngine(fuse=True)
+    a = _rand_inputs(32, 64, seed=7)[0]
+    t = e.xor(a, a)
+    assert isinstance(t, LazyArray)
+    assert t.shape == (64,) and t.size == 64 and t.ndim == 1
+    assert t.dtype == np.uint64
+    assert "pending" in repr(t)
+    e.flush()
+    assert "materialized" in repr(t)
+    np.testing.assert_array_equal(t.materialize(), np.zeros(64, np.uint64))
+    e.flush()  # idempotent no-op
+
+
+def test_lazy_array_eq_and_bool_follow_ndarray_semantics():
+    """`==` must compare values (not identity) and truth-testing must
+    behave like ndarray — no silent scalars from ported eager code."""
+    e = PulsarEngine(fuse=True)
+    z = np.arange(4, dtype=np.uint64)
+    t1 = e.add(z, z)
+    t2 = e.add(z, z)
+    np.testing.assert_array_equal(t1 == t2, np.full(4, True))
+    np.testing.assert_array_equal(t1 != t2, np.full(4, False))
+    with pytest.raises(ValueError):  # ambiguous, exactly like ndarray
+        bool(e.add(z, z))
+    one = e.add(np.ones(1, np.uint64), np.zeros(1, np.uint64))
+    assert bool(one)
+
+
+def test_eager_fallback_ops_consume_lazy_operands():
+    """mul/div are outside the fused ISA: they must force materialization
+    and still produce eager-identical results and stats."""
+    inputs = _rand_inputs(16, 96, seed=11)
+    inputs[1] |= np.uint64(1)  # no div-by-zero
+    eager = PulsarEngine(width=16)
+    fused = PulsarEngine(width=16, fuse=True)
+
+    def run(e):
+        t = e.add(inputs[0], inputs[2])
+        m = e.mul(t, inputs[1])
+        d = e.div(m, inputs[1])
+        s = e.sub(d, t)  # fusion resumes after the eager island
+        return [np.asarray(x, np.uint64) for x in (t, m, d, s)]
+
+    for w, g in zip(run(eager), run(fused)):
+        np.testing.assert_array_equal(w, g)
+    assert eager.stats == fused.stats
+
+
+def test_graph_splits_on_element_count_change():
+    e = PulsarEngine(fuse=True)
+    a = _rand_inputs(32, 64, seed=13)[0]
+    b = _rand_inputs(32, 128, seed=14)[0]
+    x = e.add(a, a)
+    y = e.add(b, b)  # different n: previous graph flushes
+    np.testing.assert_array_equal(np.asarray(x),
+                                  (a + a) & np.uint64(0xFFFFFFFF))
+    np.testing.assert_array_equal(np.asarray(y),
+                                  (b + b) & np.uint64(0xFFFFFFFF))
+
+
+def test_dead_handles_are_dead_code():
+    e = PulsarEngine(fuse=True)
+    a = _rand_inputs(32, 64, seed=17)[0]
+    tmp = e.and_(a, a)
+    tmp = e.xor(tmp, a)  # first AND's handle dies here
+    keep = e.add(tmp, a)
+    del tmp
+    lat = e.stats.latency_ns  # dead ops were still charged
+    e.flush()
+    assert e.stats.latency_ns == lat
+    np.testing.assert_array_equal(
+        np.asarray(keep), (a + (a ^ (a & a))) & np.uint64(0xFFFFFFFF))
+
+
+def test_pipeline_cache_reuses_compiled_programs():
+    """Same graph structure across batches -> one compiled pipeline."""
+    e = PulsarEngine(fuse=True)
+
+    def batch(seed):
+        a, b, c = _rand_inputs(32, 256, seed)
+        t = e.and_(a, b)
+        t = e.add(t, c)
+        return np.asarray(t)
+
+    batch(0)
+    info = fused_program._cached_pipeline.cache_info()
+    for s in range(1, 4):
+        batch(s)
+    after = fused_program._cached_pipeline.cache_info()
+    assert after.currsize == info.currsize
+    assert after.hits == info.hits + 3
+
+
+def test_fuse_requires_fast_backend():
+    with pytest.raises(ValueError):
+        PulsarEngine(backend="sim", fuse=True)
+
+
+def test_fused_rejects_out_of_width_operands():
+    """Eager ops compute on raw uint64 values; fused computes modulo
+    2**width. Out-of-range operands must fail loudly, not silently
+    truncate into different answers."""
+    e = PulsarEngine(width=8, fuse=True)
+    with pytest.raises(ValueError, match="modulo"):
+        e.and_(np.array([256, 1], np.uint64), np.array([1, 1], np.uint64))
+    # eager keeps the raw-uint64 semantics realworld's kernels rely on
+    eager = PulsarEngine(width=8)
+    np.testing.assert_array_equal(
+        eager.and_(np.array([256 + 5], np.uint64),
+                   np.array([260], np.uint64)),
+        np.array([256 + 4], np.uint64))
+
+
+def test_temporary_operands_do_not_collide():
+    """id()-keyed leaf dedup must pin operands: freed temporaries whose
+    addresses get reused by later operands must not resolve to a stale
+    leaf snapshot."""
+    e = PulsarEngine(fuse=True)
+    outs = []
+    for k in range(8):
+        tmp = np.full(64, k, np.uint64)  # dies each iteration
+        outs.append(e.add(tmp, tmp))
+        del tmp
+    for k, o in enumerate(outs):
+        np.testing.assert_array_equal(np.asarray(o),
+                                      np.full(64, 2 * k, np.uint64))
+
+
+def test_materialized_handles_release_the_graph():
+    e = PulsarEngine(fuse=True)
+    a = np.arange(64, dtype=np.uint64)
+    t = e.add(a, a)
+    assert any(p is a for p in e._graph._pins)  # id() key held alive
+    np.testing.assert_array_equal(np.asarray(t), 2 * a)
+    assert t._graph is None and t._engine is None  # snapshots reclaimable
+
+
+def test_operand_mutation_after_record_does_not_alias():
+    """The graph snapshots operands at record time: mutating the caller's
+    buffer before flush must not change the result (eager parity)."""
+    e = PulsarEngine(fuse=True)
+    b = np.arange(64, dtype=np.uint64)
+    t = e.add(b, b)
+    b[:] = 0
+    np.testing.assert_array_equal(np.asarray(t),
+                                  2 * np.arange(64, dtype=np.uint64))
+
+
+def test_operand_mutation_between_uses_registers_fresh_leaf():
+    """Re-feeding the same buffer after an in-place mutation must see the
+    new content (eager parity), not dedup to the stale snapshot."""
+    e = PulsarEngine(fuse=True)
+    a = np.zeros(64, dtype=np.uint64)
+    t1 = e.add(a, a)
+    a[:] = 5
+    t2 = e.add(a, a)
+    np.testing.assert_array_equal(np.asarray(t1), np.zeros(64, np.uint64))
+    np.testing.assert_array_equal(np.asarray(t2),
+                                  np.full(64, 10, np.uint64))
+
+
+def test_flush_failure_keeps_handles_recoverable(monkeypatch):
+    """A transient pipeline failure must not orphan pending handles: the
+    graph is restored and a later materialize retries."""
+    from repro.core import engine as engine_mod
+    e = PulsarEngine(fuse=True)
+    a = np.arange(64, dtype=np.uint64)
+    t = e.add(a, a)
+
+    def boom(*args, **kw):
+        raise RuntimeError("transient backend failure")
+
+    real = engine_mod.get_pipeline
+    monkeypatch.setattr(engine_mod, "get_pipeline", boom)
+    with pytest.raises(RuntimeError, match="transient"):
+        t.materialize()
+    monkeypatch.setattr(engine_mod, "get_pipeline", real)
+    np.testing.assert_array_equal(t.materialize(), 2 * a)
+
+
+def test_pending_lazy_crosses_engines_via_materialization():
+    """A pending handle from one engine fed into another fused engine must
+    materialize through its own engine, not alias the foreign graph."""
+    a = _rand_inputs(32, 64, seed=29)[0]
+    e1 = PulsarEngine(fuse=True)
+    e2 = PulsarEngine(fuse=True)
+    t = e1.add(a, a)
+    r = e2.xor(t, a)
+    np.testing.assert_array_equal(
+        np.asarray(r), (((a + a) & np.uint64(0xFFFFFFFF)) ^ a))
+
+
+# --------------------------------------------------------------------- #
+# SWAR popcount regression (fixed-iteration replacement for the old
+# data-dependent shift loop and the per-element Python path)
+# --------------------------------------------------------------------- #
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_swar_popcount_matches_scalar_oracle(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**64, 257, dtype=np.uint64)  # full 64-bit range
+    want = np.array([bin(int(x)).count("1") for x in a], np.uint64)
+    np.testing.assert_array_equal(_vec_popcount(a), want)
+
+
+def test_swar_popcount_edge_values():
+    a = np.array([0, 1, 2**63, 2**64 - 1, 0x5555555555555555], np.uint64)
+    np.testing.assert_array_equal(_vec_popcount(a),
+                                  np.array([0, 1, 1, 64, 32], np.uint64))
+    # 2-D shape preserved; input not mutated
+    m = np.array([[3, 7], [15, 255]], np.uint64)
+    m0 = m.copy()
+    np.testing.assert_array_equal(_vec_popcount(m),
+                                  np.array([[2, 3], [4, 8]], np.uint64))
+    np.testing.assert_array_equal(m, m0)
+
+
+def test_engine_popcount_small_arrays_use_swar():
+    """The old per-element ``bin(int(x))`` path for size<4096 is gone; the
+    vector path must be exact at every size."""
+    e = PulsarEngine(width=32)
+    rng = np.random.default_rng(23)
+    for n in (1, 31, 33, 4095, 5000):
+        a = rng.integers(0, 2**32, n, dtype=np.uint64)
+        want = np.array([bin(int(x)).count("1") for x in a], np.uint64)
+        np.testing.assert_array_equal(np.asarray(e.popcount(a)), want)

@@ -183,3 +183,109 @@ def test_maj_n_fast_matches_oracle(n, threshold):
     np.testing.assert_array_equal(
         np.asarray(ref.maj_n_fast(x, threshold)),
         np.asarray(ref.maj_n(x, threshold)))
+
+
+# --------------------------------------------------------------------- #
+# fused_program
+# --------------------------------------------------------------------- #
+
+from repro.kernels.fused_program import (FusedOp, FusedProgram,  # noqa: E402
+                                         get_pipeline, run_program_pallas,
+                                         run_program_ref)
+
+_FUSED_DEMO = FusedProgram(
+    width=16, n_inputs=3,
+    ops=(FusedOp("and", (0, 1)),
+         FusedOp("xor", (3, 2)),
+         FusedOp("add", (4, 0)),
+         FusedOp("sub", (5, 1)),
+         FusedOp("less", (6, 2)),
+         FusedOp("popcount", (5,)),
+         FusedOp("reduce_and", (3,), param=16),
+         FusedOp("reduce_or", (6,)),
+         FusedOp("reduce_xor", (5,))),
+    outputs=(6, 7, 8, 9, 10, 11))
+
+
+def _fused_demo_stacks(n_el, seed):
+    rng = np.random.default_rng(seed)
+    vals = [rng.integers(0, 1 << 16, n_el, dtype=np.uint64)
+            for _ in range(3)]
+    stack = jnp.asarray(np.stack([to_vertical(v, 16).view(np.int32)
+                                  for v in vals]))
+    return vals, stack
+
+
+def _fused_demo_oracle(vals):
+    a, b, c = vals
+    mask = np.uint64(0xFFFF)
+    t0 = a & b
+    t1 = t0 ^ c
+    t2 = (t1 + a) & mask
+    t3 = (t2 - b) & mask
+    return [t3, (t3 < c).astype(np.uint64),
+            np.array([bin(int(x)).count("1") for x in t2], np.uint64),
+            (t0 == mask).astype(np.uint64),
+            (t3 != 0).astype(np.uint64),
+            np.array([bin(int(x)).count("1") & 1 for x in t2], np.uint64)]
+
+
+@pytest.mark.parametrize("n_el", [256, 4096])
+def test_fused_program_ref_vs_numpy(n_el):
+    vals, stack = _fused_demo_stacks(n_el, seed=n_el)
+    got = np.asarray(run_program_ref(_FUSED_DEMO, stack)).view(np.uint32)
+    for plane_stack, want in zip(got, _fused_demo_oracle(vals)):
+        np.testing.assert_array_equal(from_vertical(plane_stack), want)
+
+
+def test_fused_program_pallas_matches_ref():
+    from repro.kernels import run_fused_program
+    _, stack = _fused_demo_stacks(2048, seed=1)
+    want = np.asarray(run_program_ref(_FUSED_DEMO, stack))
+    np.testing.assert_array_equal(
+        np.asarray(run_program_pallas(_FUSED_DEMO, stack, interpret=True)),
+        want)
+    # ops-layer dispatch: oracle on CPU, Pallas under force_pallas
+    np.testing.assert_array_equal(
+        np.asarray(run_fused_program(_FUSED_DEMO, stack)), want)
+    np.testing.assert_array_equal(
+        np.asarray(run_fused_program(_FUSED_DEMO, stack, force_pallas=True,
+                                     interpret=True)), want)
+
+
+def test_fused_pipeline_end_to_end():
+    """get_pipeline handles the framing too, and the CPU word-domain path
+    must agree bit-for-bit with the vertical transpose+planes form."""
+    vals, _ = _fused_demo_stacks(512, seed=2)
+    leaves = [jnp.asarray(v.astype(np.uint32).view(np.int32)) for v in vals]
+    outs = get_pipeline(_FUSED_DEMO)(*leaves)
+    vert = get_pipeline(_FUSED_DEMO, force_vertical=True)(*leaves)
+    for got, gvert, want in zip(outs, vert, _fused_demo_oracle(vals)):
+        np.testing.assert_array_equal(
+            np.asarray(got).view(np.uint32).astype(np.uint64), want)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(gvert))
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=15, deadline=None)
+def test_fused_plane_algebra_property(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << 16, 64, dtype=np.uint64)
+    b = rng.integers(0, 1 << 16, 64, dtype=np.uint64)
+    pa = [jnp.asarray(p.view(np.int32)) for p in to_vertical(a, 16)]
+    pb = [jnp.asarray(p.view(np.int32)) for p in to_vertical(b, 16)]
+
+    add = np.stack([np.asarray(p).view(np.uint32)
+                    for p in ref.plane_add(pa, pb)])
+    np.testing.assert_array_equal(from_vertical(add), (a + b) & 0xFFFF)
+
+    diff, borrow = ref.plane_sub(pa, pb)
+    diff = np.stack([np.asarray(p).view(np.uint32) for p in diff])
+    np.testing.assert_array_equal(from_vertical(diff), (a - b) & 0xFFFF)
+    lt = from_vertical(np.asarray(borrow).view(np.uint32)[None])
+    np.testing.assert_array_equal(lt, (a < b).astype(np.uint64))
+
+    counts = ref.plane_popcount(pa)
+    counts = np.stack([np.asarray(p).view(np.uint32) for p in counts])
+    want = np.array([bin(int(x)).count("1") for x in a], np.uint64)
+    np.testing.assert_array_equal(from_vertical(counts), want)
