@@ -26,10 +26,13 @@ def _engines(trefi: float | None = None):
     if trefi not in _CONTROLLERS:
         _CONTROLLERS[trefi] = MemoryController(n_banks=16, trefi=trefi)
     ctrl = _CONTROLLERS[trefi]
+    # fuse=True: the app kernels execute through the fused dataplane
+    # (bit-exact, cost plane invariant — the reported latencies are
+    # unchanged; the host-side dataplane just compiles to fewer passes).
     return (PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=True,
-                         controller=ctrl),
+                         controller=ctrl, fuse=True),
             PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=False,
-                         controller=ctrl))
+                         controller=ctrl, fuse=True))
 
 
 def run() -> list[Row]:

@@ -166,6 +166,16 @@ class MemoryController:
         banks refresh-free (raw makespan), and (c) repeated until the
         simulated window spans at least two tREFI with refresh on, giving
         the amortized steady-state batch latency.
+
+        Units: all latencies are nanoseconds (DDR4-2400 tCK grid from
+        ``core/timing.py``). The returned ``BankBatchCost`` carries the
+        dimensionless ``parallel_speedup`` (single-bank time / per-unit
+        batch time, <= banks — tFAW/tRRD/bus-limited) and
+        ``refresh_factor`` (steady-state slowdown >= 1.0) that
+        ``EngineStats.charge`` applies to the closed-form single-bank
+        latency; results are cached per (banks, program signature).
+        This is the cost plane's only entry point into the controller:
+        both eager and fused engine modes price through it identically.
         """
         banks = max(1, min(banks, self.n_banks))
         progs = self._as_programs(unit_programs)

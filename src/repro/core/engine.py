@@ -23,11 +23,26 @@ silicon what PULSAR's chained staging does in the DRAM command stream
 (§5.2): batch the op sequence, pay the staging cost once. The *cost plane
 is invariant*: every op is charged at record time exactly as in eager mode,
 so EngineStats (and fig17/fig20 numbers) are identical in both modes.
-Results are computed modulo 2**width (the vertical layout holds ``width``
-planes); operands with bits at or above ``width`` are rejected at record
-time rather than silently truncated, because eager ops compute on raw
-uint64 values (realworld's packed-bitmap kernels depend on that). mul/div
-and the sim backend fall back to eager execution.
+
+The whole integer op set is in the fused ISA — including ``mul``
+(shift-add over the add plane) and ``div``/``mod`` (restoring division
+over the add/sub planes) — so complete workloads compile to one trace.
+Before compilation the recorded graph is normalized (CSE + dead-node
+pruning, ``fused_program.optimize_program``); auto-flush thresholds
+(``flush_threshold`` recorded ops / ``flush_memory_bytes`` estimated graph
+bytes) bound graph growth for long-running callers. Only the sim backend
+stays eager-only.
+
+Width semantics: fused arithmetic computes modulo 2**width (the vertical
+layout holds ``width`` planes); arithmetic operands with bits at or above
+``width`` are rejected at record time rather than silently truncated,
+because eager ops compute on raw uint64 values. The *plane-wise* ops
+(``and_``/``or_``/``xor``) instead switch to a raw packed-bitmap mode on
+out-of-width operands: each 64-bit word splits into two 32-bit lanes
+(bit-exact for bitwise ops at any value range — this is what realworld's
+packed-bitmap kernels route through), and the halves are re-joined at
+materialization. Cost charging is identical either way: ops are priced on
+the caller-visible element count before the dataplane splits lanes.
 """
 
 from __future__ import annotations
@@ -44,11 +59,22 @@ from repro.core.cost_model import CostModel, OpCost, ZERO
 from repro.core.geometry import DramGeometry, PAPER_MODULE
 from repro.core.profiles import PROFILES
 from repro.core.pulsar import PulsarExecutor
-from repro.kernels.fused_program import FusedOp, FusedProgram, get_pipeline
+from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
+                                         optimize_program)
 
 
 @dataclasses.dataclass
 class EngineStats:
+    """Accumulated cost-plane charges for one engine session.
+
+    Units: ``latency_ns`` and ``refresh_stall_ns`` in nanoseconds,
+    ``energy_j`` in joules (per-command energies derive from pJ-scale
+    DDR4 IDD figures in the cost model), ``n_sequences`` counts
+    row-activation command sequences, ``lane_efficiency`` is the minimum
+    success rate (0..1] over the ops used. Charges accrue at op-issue
+    time in both eager and fused modes (fused ``flush()`` never touches
+    this object), so the two modes are stats-identical by construction.
+    """
     latency_ns: float = 0.0
     energy_j: float = 0.0
     n_sequences: int = 0
@@ -123,6 +149,17 @@ class LazyArray:
         v = self.materialize()
         return v.astype(dtype) if dtype is not None else v
 
+    # ndarray conveniences the app kernels lean on: each materializes
+    # (flushing the graph) and delegates — results are plain ndarrays.
+    def sum(self, *args, **kw):
+        return self.materialize().sum(*args, **kw)
+
+    def reshape(self, *shape, **kw) -> np.ndarray:
+        return self.materialize().reshape(*shape, **kw)
+
+    def astype(self, dtype, **kw) -> np.ndarray:
+        return self.materialize().astype(dtype, **kw)
+
     # ndarray comparison/truth semantics, not object identity: code ported
     # from eager mode must not silently get `False` from `t1 == t2`.
     def __eq__(self, other):
@@ -144,11 +181,17 @@ class LazyArray:
 class _OpGraph:
     """Recording buffer for one fused program: leaf operand arrays plus the
     op list, with weakrefs to the handed-out LazyArrays (ops whose handle
-    died unreferenced are dead code — never materialized)."""
+    died unreferenced are dead code — never materialized).
 
-    def __init__(self, n: int, width: int):
-        self.n = n                      # element count (all values)
+    ``raw=True`` marks a packed-bitmap graph: plane-wise ops on raw uint64
+    words, each split into two 32-bit dataplane lanes (``n`` counts lanes,
+    width is fixed at 32). A graph is entirely raw or entirely value-mode;
+    the engine flushes at mode boundaries."""
+
+    def __init__(self, n: int, width: int, raw: bool = False):
+        self.n = n                      # dataplane lane count (all values)
         self.width = width
+        self.raw = raw
         self.leaves: list[np.ndarray] = []
         self._leaf_ids: dict[int, int] = {}
         self._pins: list[np.ndarray] = []  # keep id() keys alive (below)
@@ -169,11 +212,15 @@ class _OpGraph:
         alias — call flush() before mutating operands in place.)"""
         key = id(arr)
         flat = arr.ravel()
+        if self.raw:  # split each 64-bit word into two 32-bit lanes
+            flat = np.ascontiguousarray(flat).view(np.uint32)
         idx = self._leaf_ids.get(key)
         if idx is not None and np.array_equal(flat[self._fp_idx],
                                               self._fps[idx]):
             return ("leaf", idx)
-        if self.width < 64 and flat.size \
+        # Width guard is value-mode only: raw lanes are uint32 and the raw
+        # graph width is 32, so the scan could never fire there.
+        if not self.raw and self.width < 64 and flat.size \
                 and int(flat.max()) >> self.width:
             # Loud, not silent: eager ops compute on raw uint64 values
             # (realworld's packed-bitmap kernels rely on that), so
@@ -199,14 +246,44 @@ class _OpGraph:
 
 
 class PulsarEngine:
-    """Bulk bitwise/bit-serial integer SIMD on (simulated) PuM DRAM."""
+    """Bulk bitwise/bit-serial integer SIMD on (simulated) PuM DRAM.
+
+    Dataplane values are unsigned integers carried in uint64 ndarrays;
+    arithmetic ops (``add``/``sub``/``mul``/``div``/``mod``/``less_than``/
+    ``popcount``/``reduce_bits``) compute modulo ``2**width``. The cost
+    plane prices every op in nanoseconds/joules via the paper-calibrated
+    ``CostModel`` (``stats.latency_ns`` / ``stats.energy_j``), independent
+    of which dataplane backend produced the values.
+
+    With ``fuse=True`` ops return :class:`LazyArray` handles and execute
+    as one compiled program per :meth:`flush` — bit-exact and
+    stats-identical to eager, including division by zero:
+
+    >>> import numpy as np
+    >>> e = PulsarEngine(width=16, fuse=True)
+    >>> q = e.div(np.array([1000, 7], np.uint64),
+    ...           np.array([6, 0], np.uint64))
+    >>> np.asarray(q)                    # x // 0 == 0, as in eager NumPy
+    array([166,   0], dtype=uint64)
+    >>> e2 = PulsarEngine(width=16)      # eager twin: identical charges
+    >>> _ = e2.div(np.array([1000, 7], np.uint64),
+    ...            np.array([6, 0], np.uint64))
+    >>> e.stats == e2.stats
+    True
+
+    ``flush_threshold`` (recorded ops) and ``flush_memory_bytes``
+    (estimated graph footprint) auto-flush oversized graphs; pass ``None``
+    to disable either bound.
+    """
 
     def __init__(self, mfr: str = "M", width: int = 32,
                  row_bits: int = 65536, banks: int = 16,
                  backend: str = "fast",
                  success_db: SuccessRateDb | None = None,
                  use_pulsar: bool = True, chained: bool = False,
-                 controller=None, seed: int = 0, fuse: bool = False):
+                 controller=None, seed: int = 0, fuse: bool = False,
+                 flush_threshold: int | None = 1024,
+                 flush_memory_bytes: int | None = 1 << 30):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -231,7 +308,11 @@ class PulsarEngine:
             raise ValueError("fuse=True requires backend='fast'")
         if fuse and width > 32:
             raise ValueError("fused pipeline supports width <= 32")
+        if flush_threshold is not None and flush_threshold < 1:
+            raise ValueError("flush_threshold must be >= 1 or None")
         self.fuse = fuse
+        self.flush_threshold = flush_threshold
+        self.flush_memory_bytes = flush_memory_bytes
         self._graph: _OpGraph | None = None
         if backend == "sim":
             geom = DramGeometry(row_bits=min(row_bits, 2048),
@@ -408,17 +489,41 @@ class PulsarEngine:
         shape = operands[0].shape
         return all(x.shape == shape for x in operands[1:])
 
-    def _record(self, opcode: str, operands: tuple, param: int = 0
-                ) -> LazyArray:
+    def _is_raw_operand(self, x) -> bool:
+        """Does this operand carry bits at or above the engine width?
+        (Pending raw-graph handles count; pending value-mode handles are
+        in-width by construction.)"""
+        if isinstance(x, LazyArray):
+            if x._value is None:
+                return x._graph is not None and x._graph.raw
+            x = x._value
+        return bool(self.width < 64 and x.size
+                    and int(x.max()) >> self.width)
+
+    def _use_raw(self, operands: tuple) -> bool:
+        """Plane-wise ops route through the raw packed-bitmap graph when
+        any operand is out of width (bit-exact: bitwise ops split cleanly
+        into two 32-bit lanes per 64-bit word) or when a raw graph of the
+        same lane count is already open (in-width words join it losslessly
+        — their high lanes are zero)."""
+        g = self._graph
+        if g is not None and g.raw and g.n == 2 * operands[0].size:
+            return True
+        return any(self._is_raw_operand(x) for x in operands)
+
+    def _record(self, opcode: str, operands: tuple, param: int = 0,
+                raw: bool = False) -> LazyArray:
         """Append one op to the lazy graph (starting/flushing as needed)
         and hand back its LazyArray."""
-        n, shape = operands[0].size, operands[0].shape
+        shape = operands[0].shape
+        n = operands[0].size * (2 if raw else 1)  # dataplane lanes
         g = self._graph
-        if g is not None and g.n != n:
-            self.flush()  # one program = one element count
+        if g is not None and (g.n != n or g.raw != raw):
+            self.flush()  # one program = one lane count and one mode
             g = None
         if g is None:
-            g = self._graph = _OpGraph(n, self.width)
+            g = self._graph = _OpGraph(n, 32 if raw else self.width,
+                                       raw=raw)
         args = []
         for x in operands:
             if isinstance(x, LazyArray) and x._value is None \
@@ -432,13 +537,30 @@ class PulsarEngine:
                 args.append(g.leaf_id(arr))
         out = LazyArray(self, g, len(g.ops), shape)
         g.add_op(opcode, tuple(args), param, out)
+        if self._graph_over_threshold(g):
+            self.flush()  # auto-flush: `out` is live, so it materializes
         return out
+
+    def _graph_over_threshold(self, g: _OpGraph) -> bool:
+        """Auto-flush policy: graph-size (recorded ops) and estimated
+        memory (4 bytes per lane per held value: leaf snapshots plus the
+        pipeline's per-op intermediates)."""
+        if self.flush_threshold is not None \
+                and len(g.ops) >= self.flush_threshold:
+            return True
+        if self.flush_memory_bytes is not None:
+            est = 4 * g.n * (len(g.leaves) + len(g.ops))
+            return est >= self.flush_memory_bytes
+        return False
 
     def flush(self) -> None:
         """Materialize the pending op graph through the fused bit-plane
         pipeline (one transpose in, one fused program, one transpose out).
-        No-op when nothing is pending; never touches the cost plane — every
-        op was charged at record time."""
+        The recorded graph is normalized first (CSE + dead-node pruning,
+        ``fused_program.optimize_program``) — results and EngineStats are
+        unaffected, only redundant dataplane work is dropped. No-op when
+        nothing is pending; never touches the cost plane — every op was
+        charged at record time."""
         g, self._graph = self._graph, None
         if g is None or not g.ops:
             return
@@ -455,13 +577,15 @@ class PulsarEngine:
             return tag[1] if tag[0] == "leaf" else n_leaves + tag[1]
 
         program = FusedProgram(
-            width=self.width, n_inputs=n_leaves,
+            width=g.width, n_inputs=n_leaves,
             ops=tuple(FusedOp(opcode, tuple(vid(a) for a in args), param)
                       for opcode, args, param in g.ops),
             outputs=tuple(n_leaves + i for i in out_idx))
+        program, out_pos, leaf_map = optimize_program(program)
         pad = (-g.n) % 32
         leaves = []
-        for flat in g.leaves:  # uint32 snapshots (see _OpGraph.leaf_id)
+        for li in leaf_map:  # uint32 snapshots (see _OpGraph.leaf_id)
+            flat = g.leaves[li]
             if pad:
                 flat = np.pad(flat, (0, pad))
             leaves.append(flat.view(np.int32))
@@ -473,15 +597,21 @@ class PulsarEngine:
             # flush/materialize can retry instead of orphaning them.
             self._graph = g
             raise
-        for i, out in zip(out_idx, outs):
+        for i, pos in zip(out_idx, out_pos):
             lz = live[i]
-            val = np.asarray(out).view(np.uint32).astype(np.uint64)
-            lz._value = val[:g.n].reshape(lz.shape)
+            u32 = np.asarray(outs[pos]).view(np.uint32)[:g.n]
+            if g.raw:  # re-join the two 32-bit lanes of each 64-bit word
+                val = u32.copy().view(np.uint64)
+            else:
+                val = u32.astype(np.uint64)
+            lz._value = val.reshape(lz.shape)
             # A materialized handle never needs the graph again — drop the
             # references so surviving handles don't pin the leaf snapshots
             # (or the engine) for their lifetime.
             lz._graph = None
             lz._engine = None
+
+    _PLANEWISE = frozenset({"and", "or", "xor"})
 
     def _binary(self, kind: str, opcode: str, a, b, np_fn):
         """kind prices the op (cost plane); opcode names it in the fused
@@ -489,6 +619,8 @@ class PulsarEngine:
         a, b = self._coerce(a), self._coerce(b)
         self._charge(kind, a.size)
         if self._can_fuse(a, b):
+            if opcode in self._PLANEWISE and self._use_raw((a, b)):
+                return self._record(opcode, (a, b), raw=True)
             return self._record(opcode, (a, b))
         return self._run2(opcode, self._force(a), self._force(b), np_fn)
 
@@ -509,16 +641,24 @@ class PulsarEngine:
         return self._binary("add", "sub", a, b,
                             lambda x, y: (x - y) & self._mask(self.width))
 
-    def mul(self, a, b):  # not in the fused ISA: eager fallback
-        a, b = self._force(self._coerce(a)), self._force(self._coerce(b))
-        self._charge("mul", a.size)
-        return self._run2("mul", a, b,
-                          lambda x, y: (x * y) & self._mask(self.width))
+    def mul(self, a, b):
+        return self._binary("mul", "mul", a, b,
+                            lambda x, y: (x * y) & self._mask(self.width))
 
-    def div(self, a, b):  # not in the fused ISA: eager fallback
-        a, b = self._force(self._coerce(a)), self._force(self._coerce(b))
-        self._charge("div", a.size)
-        return self._run2("div", a, b, lambda x, y: x // y)
+    def div(self, a, b):
+        """Unsigned floor division; lanes dividing by zero yield 0 (the
+        NumPy unsigned semantics, preserved bit-exactly when fused)."""
+        with np.errstate(divide="ignore"):
+            return self._binary("div", "div", a, b, lambda x, y: x // y)
+
+    def mod(self, a, b):
+        """Unsigned remainder, priced as one division (the restoring
+        divider computes the remainder alongside the quotient, so the
+        cost model charges the same pass); lanes with a zero divisor
+        yield 0. Note div+mod of the same operands record as two IR ops —
+        a shared divmod tuple op is a ROADMAP item."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return self._binary("div", "mod", a, b, lambda x, y: x % y)
 
     def less_than(self, a, b):
         a, b = self._coerce(a), self._coerce(b)
@@ -558,9 +698,9 @@ class PulsarEngine:
             vb = alu.load(b.ravel()[: alu.words * 32])
             fn = {"and": alu.and_, "or": alu.or_, "xor": alu.xor,
                   "add": alu.add, "sub": alu.sub, "mul": alu.mul}.get(name)
-            if fn is None and name == "div":
+            if fn is None and name in ("div", "mod"):
                 q, r = alu.div(va, vb)
-                out = alu.store(q)
+                out = alu.store(q if name == "div" else r)
             else:
                 out = alu.store(fn(va, vb))
             return out[: a.size].reshape(a.shape)

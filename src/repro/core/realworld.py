@@ -5,6 +5,14 @@ verified against direct NumPy in tests; the PuM latency comes from the
 engine's cost plane, the CPU number is the measured NumPy wall time on this
 host (a *context* number — the paper measured a Skylake with AVX-512).
 
+Every kernel runs unchanged on an eager (``fuse=False``) or fused
+(``fuse=True``) engine and produces identical results and EngineStats: the
+packed-bitmap set intersections (BMI/TC/KCS) record through the engine's
+raw planewise path (64-bit words split into two 32-bit dataplane lanes),
+the arithmetic kernels (BW/KNN/IMS) through the value-mode fused ISA
+(now including ``mul``). The serving/benchmark stacks construct fused
+engines by default (fig20_realworld.py, examples/pum_database.py).
+
 Kernels (paper's nine, the bitwise-dominated seven implemented end-to-end;
 the two XNOR-CNNs are modeled at op-count level — their conv loops reduce to
 XNOR+popcount+add on the same primitives):
@@ -178,7 +186,9 @@ def image_segmentation(engine: PulsarEngine, img: np.ndarray,
 
     want, cpu_ms = _timed(cpu)
     engine.reset_stats()
-    best = np.full(p.shape, np.iinfo(np.int64).max, np.uint64)
+    # Width-max sentinel (not uint64-max): distances are in-width values,
+    # so the compare network works identically on eager and fused engines.
+    best = np.full(p.shape, (1 << engine.width) - 1, np.uint64)
     label = np.zeros(p.shape, np.uint64)
     for ci, c in enumerate(colors):
         d1 = engine.sub(p.astype(np.uint64), np.full_like(best, c))

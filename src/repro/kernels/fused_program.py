@@ -36,9 +36,17 @@ trace (jax.jit additionally caches per operand shape).
 Value semantics: elements are unsigned, width-bit (everything is computed
 modulo 2**width — the vertical layout physically holds ``width`` planes).
 Opcodes: and/or/xor (plane-wise), add/sub (ripple carry/borrow),
+mul (shift-add over the add plane), div/mod (restoring division over the
+add/sub planes; lanes dividing by zero yield 0, matching unsigned NumPy),
 less (unsigned compare -> 0/1), popcount (adder tree over the element's
 planes), reduce_and(param=w) (== mask(w)), reduce_or (!= 0), reduce_xor
 (parity).
+
+Before compilation the engine normalizes each recorded graph with
+``optimize_program`` (common-subexpression elimination + dead-node/leaf
+pruning). The optimizer is a pure function of graph structure, so the
+normalized program remains the pipeline-cache key: re-recording the same
+op sequence over new batches still hits the cached trace.
 """
 
 from __future__ import annotations
@@ -57,8 +65,12 @@ LANE = 128
 SUBLANE = 8
 BLOCK_WORDS = SUBLANE * LANE  # one (8, 128) int32 tile per grid step
 
-OPCODES = ("and", "or", "xor", "add", "sub", "less", "popcount",
-           "reduce_and", "reduce_or", "reduce_xor")
+OPCODES = ("and", "or", "xor", "add", "sub", "mul", "div", "mod", "less",
+           "popcount", "reduce_and", "reduce_or", "reduce_xor")
+
+# Opcodes whose operand order does not matter: CSE canonicalizes their
+# argument tuples by sorting so `add(a, b)` and `add(b, a)` unify.
+COMMUTATIVE = frozenset({"and", "or", "xor", "add", "mul"})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,11 +84,91 @@ class FusedOp:
 
 @dataclasses.dataclass(frozen=True)
 class FusedProgram:
-    """A straight-line bit-plane program (hashable == pipeline cache key)."""
+    """A straight-line bit-plane program (hashable == pipeline cache key).
+
+    Value-id space: leaf inputs occupy ids ``0..n_inputs-1``; op ``i``'s
+    result is id ``n_inputs + i``. ``outputs`` lists the value ids to
+    materialize. Values are unsigned width-bit integers; every opcode
+    computes modulo ``2**width``.
+    """
     width: int
     n_inputs: int
     ops: tuple[FusedOp, ...]
     outputs: tuple[int, ...]  # value ids to materialize
+
+
+def optimize_program(program: FusedProgram
+                     ) -> tuple[FusedProgram, tuple[int, ...],
+                                tuple[int, ...]]:
+    """Common-subexpression elimination + dead-node/leaf pruning.
+
+    Returns ``(optimized, out_pos, leaf_map)``:
+
+    * ``optimized`` — the normalized program. Structurally identical
+      recordings normalize identically, so it remains a valid pipeline
+      cache key (commutative args are sorted, duplicate ops unified,
+      unreferenced ops and leaves dropped, ids renumbered densely).
+    * ``out_pos`` — for each entry of ``program.outputs``, the index into
+      ``optimized.outputs`` holding its value (CSE can map several
+      requested outputs onto one computed value).
+    * ``leaf_map`` — original leaf ids still used, in the order the
+      optimized program expects its inputs.
+
+    The optimizer never changes values (CSE only unifies syntactically
+    identical ops, whose results are equal by determinism) and never
+    touches the cost plane (the engine charges at record time).
+
+    >>> p = FusedProgram(width=8, n_inputs=2, ops=(
+    ...     FusedOp("add", (0, 1)), FusedOp("add", (1, 0)),
+    ...     FusedOp("xor", (2, 3)), FusedOp("and", (0, 0))), outputs=(4,))
+    >>> opt, out_pos, leaf_map = optimize_program(p)
+    >>> len(opt.ops)   # add(1,0) unified with add(0,1); dead and() pruned
+    2
+    >>> opt.ops[1].args  # xor of the shared add with itself
+    (2, 2)
+    >>> out_pos, leaf_map
+    ((0,), (0, 1))
+    """
+    n_in = program.n_inputs
+    canon: dict[int, int] = {}     # original op id -> canonical value id
+    table: dict[tuple, int] = {}   # (opcode, args, param) -> value id
+    kept: list[tuple[int, FusedOp]] = []
+    for i, op in enumerate(program.ops):
+        vid = n_in + i
+        args = tuple(canon.get(a, a) for a in op.args)
+        if op.opcode in COMMUTATIVE:
+            args = tuple(sorted(args))
+        key = (op.opcode, args, op.param)
+        prev = table.get(key)
+        if prev is not None:
+            canon[vid] = prev
+        else:
+            table[key] = canon[vid] = vid
+            kept.append((vid, FusedOp(op.opcode, args, op.param)))
+    out_canon = [canon.get(v, v) for v in program.outputs]
+    needed = set(out_canon)
+    for vid, op in reversed(kept):  # backward liveness from the outputs
+        if vid in needed:
+            needed.update(op.args)
+    live = [(vid, op) for vid, op in kept if vid in needed]
+    leaf_map = tuple(sorted(v for v in needed if v < n_in))
+    remap = {old: new for new, old in enumerate(leaf_map)}
+    for j, (vid, _) in enumerate(live):
+        remap[vid] = len(leaf_map) + j
+    ops = tuple(FusedOp(op.opcode, tuple(remap[a] for a in op.args),
+                        op.param) for _, op in live)
+    outputs: list[int] = []
+    pos_of: dict[int, int] = {}
+    out_pos = []
+    for v in out_canon:
+        rv = remap[v]
+        if rv not in pos_of:
+            pos_of[rv] = len(outputs)
+            outputs.append(rv)
+        out_pos.append(pos_of[rv])
+    opt = FusedProgram(width=program.width, n_inputs=len(leaf_map),
+                       ops=ops, outputs=tuple(outputs))
+    return opt, tuple(out_pos), leaf_map
 
 
 def eval_fused_ops(program: FusedProgram, env: list) -> list:
@@ -106,6 +198,11 @@ def _apply_op(op: FusedOp, xs: list, width: int, zero):
         return ref.plane_add(xs[0], xs[1])
     if op.opcode == "sub":
         return ref.plane_sub(xs[0], xs[1])[0]
+    if op.opcode == "mul":
+        return ref.plane_mul(xs[0], xs[1])
+    if op.opcode in ("div", "mod"):
+        q, r = ref.plane_divmod(xs[0], xs[1])
+        return q if op.opcode == "div" else r
     if op.opcode == "less":
         return scalar(ref.plane_sub(xs[0], xs[1])[1])
     if op.opcode == "popcount":
@@ -166,6 +263,14 @@ def _apply_word_op(op: FusedOp, xs: list, width: int,
         return (xs[0] + xs[1]) & mask
     if op.opcode == "sub":
         return (xs[0] - xs[1]) & mask
+    if op.opcode == "mul":
+        return (xs[0] * xs[1]) & mask
+    if op.opcode in ("div", "mod"):
+        # Unsigned NumPy semantics: x // 0 == x % 0 == 0 per lane.
+        zero_div = xs[1] == 0
+        safe = jnp.where(zero_div, jnp.uint32(1), xs[1])
+        out = xs[0] // safe if op.opcode == "div" else xs[0] % safe
+        return jnp.where(zero_div, jnp.uint32(0), out)
     if op.opcode == "less":
         return (xs[0] < xs[1]).astype(jnp.uint32)
     if op.opcode == "popcount":

@@ -4,6 +4,13 @@ On TPU the Pallas path runs natively; on CPU (this container) the wrappers
 dispatch to the jnp oracle by default — Pallas interpret mode executes the
 kernel body in Python per grid step and is for validation, not speed. Tests
 exercise interpret=True explicitly (tests/kernels/).
+
+Layout conventions (docs/architecture.md): *horizontal* operands are flat
+packed words (element i = word i); *vertical* operands are bit-plane
+stacks ``[width, W]`` where plane j holds bit j of every element
+(``bit_transpose32`` converts 32x32 tiles between the two). ``maj_n`` /
+``bitserial_add`` / ``run_fused_program`` operate on vertical planes;
+values are unsigned modulo 2**width.
 """
 
 from __future__ import annotations

@@ -187,3 +187,48 @@ def plane_reduce(planes: list, kind: str) -> jax.Array:
         acc = acc & p if kind == "and" else \
             acc | p if kind == "or" else acc ^ p
     return acc
+
+
+def plane_mul(a: list, b: list) -> list:
+    """Shift-add multiply modulo 2^width: for each set bit j of ``b`` add
+    ``a << j`` into the accumulator (partial products are the AND of the
+    shifted planes with b's plane j — the fused form of alu.py's bit-serial
+    multiplier, built entirely from plane_add)."""
+    width = len(a)
+    acc = [x & b[0] for x in a]
+    for j in range(1, width):
+        # (a << j) & b[j], restricted to the planes that survive the
+        # modulo-2^width truncation: planes [j, width) of the accumulator.
+        partial = [x & b[j] for x in a[:width - j]]
+        acc = acc[:j] + plane_add(acc[j:], partial)
+    return acc
+
+
+def plane_divmod(a: list, b: list) -> tuple[list, list]:
+    """Restoring long division on plane lists: (quotient, remainder).
+
+    Classic MSB-first schoolbook division over the add/sub planes: shift
+    the partial remainder left one plane (tracking the bit shifted out of
+    plane width-1 — if set, the remainder already exceeds any width-bit
+    divisor), bring in the next dividend bit, and use plane_sub's borrow
+    as the ``remainder >= divisor`` predicate to select per lane between
+    the restored and subtracted remainder (a bitwise mux — every lane
+    divides independently).
+
+    Division by zero follows the eager NumPy semantics the engine exposes
+    (``x // 0 == 0`` and ``x % 0 == 0`` for unsigned ints): lanes whose
+    divisor is zero are masked to zero in both outputs.
+    """
+    width = len(a)
+    zero = a[0] ^ a[0]
+    rem = [zero] * width
+    quot: list = [None] * width
+    for i in reversed(range(width)):
+        hi = rem[width - 1]            # bit shifted out: rem >= 2**width
+        rem = [a[i]] + rem[:-1]        # rem = (rem << 1) | dividend bit i
+        diff, borrow = plane_sub(rem, b)
+        qbit = hi | ~borrow            # rem >= b  (per lane)
+        quot[i] = qbit
+        rem = [(qbit & d) | (~qbit & r) for d, r in zip(diff, rem)]
+    nonzero = plane_reduce(b, "or")    # per-lane divisor != 0 mask
+    return ([q & nonzero for q in quot], [r & nonzero for r in rem])

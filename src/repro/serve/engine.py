@@ -5,6 +5,15 @@ requests prefill into a free slot's cache region; every engine tick runs one
 fused decode step for all active slots. EOS/length-stop frees slots.
 (Single-host demo of the production pattern; the jit'd step functions are
 the same ones the dry-run lowers for the 256/512-chip meshes.)
+
+Bulk slot bookkeeping routes through the PuM dataplane by default
+(``pum_bulk=True``): the per-tick stop predicate — EOS match, generated
+length cap, context-length cap, across all active slots — is one fused
+``PulsarEngine`` program (xor/reduce_or equality + less_than compares)
+instead of a per-slot Python conditional. Results are bit-identical to the
+host path (tested); the engine's cost plane (``ServeEngine.pum.stats``)
+prices what that bookkeeping would cost executed in DRAM. ``pum_bulk=
+False`` restores the pure-host loop.
 """
 
 from __future__ import annotations
@@ -18,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig
+from repro.core.engine import PulsarEngine
 from repro.models.model import decode_step, init_cache, init_params, prefill
 
 
@@ -36,8 +46,11 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_len: int = 256, eos_id: int = 1, seed: int = 0,
-                 greedy: bool = True):
+                 greedy: bool = True, pum_bulk: bool = True):
         self.cfg = cfg
+        # Fused PuM engine for bulk slot bookkeeping (stop masks): ops
+        # record lazily and each tick's predicate compiles to one program.
+        self.pum = PulsarEngine(width=32, fuse=True) if pum_bulk else None
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed))
         self.max_batch = max_batch
@@ -58,6 +71,11 @@ class ServeEngine:
             lambda p, b: prefill(cfg, p, b, max_len))
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        if self.pum is not None:
+            # Warm-up: compile the fixed-shape stop predicate now so the
+            # one-time jit cost never lands on a request's first token.
+            self._stop_mask_pum([])
+            self.pum.reset_stats()
 
     # ------------------------------------------------------------------ #
 
@@ -98,6 +116,39 @@ class ServeEngine:
             self.pos[slot] = t
             self.cur_token[slot] = tok
 
+    def _stop_mask_pum(self, active: list[int]) -> list[bool]:
+        """Bulk stop predicate on the fused PuM engine: per active slot,
+        ``tok == eos or n_generated >= max_new or pos >= max_len-1``. The
+        recorded ops (xor + reduce_or equality, less_than length caps)
+        compile into one fused program on materialization — semantics
+        identical to the host conditional in :meth:`tick`. Operands are
+        padded to the full ``max_batch`` decode batch (inactive slots get
+        never-stopping dummies and are filtered out), so every tick reuses
+        ONE compiled pipeline — it is warmed up in ``__init__`` to keep
+        the jit compile off the first-token latency path."""
+        e = self.pum
+        m = self.max_batch
+        ones = np.ones(m, np.uint64)
+        n_out = np.zeros(m, np.uint64)
+        cap = np.ones(m, np.uint64)
+        pos = np.zeros(m, np.uint64)
+        tok = np.zeros(m, np.uint64)
+        for s in active:
+            req = self.slot_req[s]
+            n_out[s] = len(req.out_tokens)
+            cap[s] = req.max_new_tokens
+            pos[s] = self.pos[s]
+            tok[s] = self.cur_token[s]
+        limit = np.full(m, self.max_len - 1, np.uint64)
+        stop = e.or_(e.xor(e.less_than(n_out, cap), ones),      # len cap
+                     e.xor(e.less_than(pos, limit), ones))      # ctx cap
+        if 0 <= self.eos_id < (1 << e.width):
+            eos = np.full(m, self.eos_id, np.uint64)
+            neq = e.reduce_bits(e.xor(tok, eos), "or")
+            stop = e.or_(stop, e.xor(neq, ones))                # EOS
+        full = np.asarray(stop).astype(bool)
+        return [bool(full[s]) for s in active]
+
     def tick(self) -> int:
         """One engine iteration: admit + one fused decode step.
         Returns number of active slots."""
@@ -115,8 +166,17 @@ class ServeEngine:
             req.out_tokens.append(tok)
             self.pos[slot] += 1
             self.cur_token[slot] = tok
-            if tok == self.eos_id or len(req.out_tokens) >= \
-                    req.max_new_tokens or self.pos[slot] >= self.max_len - 1:
+        if self.pum is not None:
+            done = self._stop_mask_pum(active)
+        else:
+            done = np.array(
+                [self.cur_token[s] == self.eos_id
+                 or len(self.slot_req[s].out_tokens)
+                 >= self.slot_req[s].max_new_tokens
+                 or self.pos[s] >= self.max_len - 1 for s in active])
+        for stop, slot in zip(done, active):
+            if stop:
+                req = self.slot_req[slot]
                 req.done = True
                 req.t_done = time.perf_counter()
                 self.finished.append(req)

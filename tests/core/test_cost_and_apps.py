@@ -181,24 +181,30 @@ def test_engine_pulsar_beats_fracdram_on_add():
     assert t_p < t_f  # the paper's headline performance claim
 
 
-def test_bmi():
-    eng = PulsarEngine(mfr="M")
+FUSE = [False, True]  # every app kernel runs on the fused path too (PR 3)
+
+
+@pytest.mark.parametrize("fuse", FUSE)
+def test_bmi(fuse):
+    eng = PulsarEngine(mfr="M", fuse=fuse)
     rng = np.random.default_rng(2)
     bitmaps = rng.integers(0, 2**64, (30, 128), dtype=np.uint64)
     got, pum_ms, cpu_ms = realworld.bmi_active_users(eng, bitmaps)
     assert pum_ms > 0 and cpu_ms >= 0
 
 
-def test_bitweaving():
-    eng = PulsarEngine(mfr="M", width=16)
+@pytest.mark.parametrize("fuse", FUSE)
+def test_bitweaving(fuse):
+    eng = PulsarEngine(mfr="M", width=16, fuse=fuse)
     rng = np.random.default_rng(3)
     col = rng.integers(0, 1000, 4096, dtype=np.uint64)
     got, pum_ms, _ = realworld.bitweaving_scan(eng, col, 100, 500)
     assert got == int(((col >= 100) & (col <= 500)).sum())
 
 
-def test_triangle_count():
-    eng = PulsarEngine(mfr="M")
+@pytest.mark.parametrize("fuse", FUSE)
+def test_triangle_count(fuse):
+    eng = PulsarEngine(mfr="M", fuse=fuse)
     rng = np.random.default_rng(4)
     n = 24
     adj = np.triu((rng.random((n, n)) < 0.3).astype(np.uint8), 1)
@@ -207,8 +213,9 @@ def test_triangle_count():
     assert pum_ms > 0
 
 
-def test_knn():
-    eng = PulsarEngine(mfr="M", width=24)
+@pytest.mark.parametrize("fuse", FUSE)
+def test_knn(fuse):
+    eng = PulsarEngine(mfr="M", width=24, fuse=fuse)
     rng = np.random.default_rng(5)
     q = rng.integers(0, 256, (4, 16), dtype=np.int64)
     r = rng.integers(0, 256, (64, 16), dtype=np.int64)
@@ -216,8 +223,9 @@ def test_knn():
     assert got.shape == (4,)
 
 
-def test_image_segmentation():
-    eng = PulsarEngine(mfr="M", width=16)
+@pytest.mark.parametrize("fuse", FUSE)
+def test_image_segmentation(fuse):
+    eng = PulsarEngine(mfr="M", width=16, fuse=fuse)
     rng = np.random.default_rng(6)
     img = rng.integers(0, 256, (32, 32), dtype=np.int64)
     colors = np.array([10, 90, 170, 250])
@@ -225,7 +233,48 @@ def test_image_segmentation():
     assert labels.max() <= 3
 
 
-def test_xnor_conv_cost_positive():
-    eng = PulsarEngine(mfr="M")
+@pytest.mark.parametrize("fuse", FUSE)
+def test_xnor_conv_cost_positive(fuse):
+    eng = PulsarEngine(mfr="M", fuse=fuse)
     ms = realworld.xnor_conv_cost(eng, 128, 128, 3, 3, 16, 16)
     assert ms > 0
+
+
+def test_app_kernels_fused_matches_eager_results_and_stats():
+    """The fuse=True routing (default for fig20/examples) must leave every
+    kernel's result AND its cost-plane charges bit-identical to eager —
+    the set intersections exercise the raw packed-bitmap path, KNN the
+    fused mul, image segmentation the fused compare network."""
+    rng = np.random.default_rng(7)
+
+    def pair(**kw):
+        return (PulsarEngine(mfr="M", **kw),
+                PulsarEngine(mfr="M", fuse=True, **kw))
+
+    bitmaps = rng.integers(0, 2**64, (12, 96), dtype=np.uint64)
+    e, f = pair()
+    r_e = realworld.bmi_active_users(e, bitmaps)
+    r_f = realworld.bmi_active_users(f, bitmaps)
+    assert r_e[0] == r_f[0] and r_e[1] == r_f[1] and e.stats == f.stats
+
+    adj = np.triu((rng.random((16, 16)) < 0.4).astype(np.uint8), 1)
+    adj = adj + adj.T
+    e, f = pair()
+    assert (realworld.kclique_star(e, adj, [(0, 1, 2), (3, 4, 5)])[0]
+            == realworld.kclique_star(f, adj, [(0, 1, 2), (3, 4, 5)])[0])
+    assert e.stats == f.stats
+
+    q = rng.integers(0, 256, (3, 8), dtype=np.int64)
+    r = rng.integers(0, 256, (32, 8), dtype=np.int64)
+    e, f = pair(width=24)
+    np.testing.assert_array_equal(realworld.knn_distances(e, q, r)[0],
+                                  realworld.knn_distances(f, q, r)[0])
+    assert e.stats == f.stats
+
+    img = rng.integers(0, 256, (16, 16), dtype=np.int64)
+    colors = np.array([15, 120, 240])
+    e, f = pair(width=16)
+    np.testing.assert_array_equal(
+        realworld.image_segmentation(e, img, colors)[0],
+        realworld.image_segmentation(f, img, colors)[0])
+    assert e.stats == f.stats

@@ -15,7 +15,7 @@ from repro.kernels import fused_program
 pytestmark = pytest.mark.fused
 
 # Chain ops: (engine method, n_operands). Applied as t = op(t, pool[i]).
-_CHAIN_OPS = ["and", "or", "xor", "add", "sub"]
+_CHAIN_OPS = ["and", "or", "xor", "add", "sub", "mul", "div", "mod"]
 _TAIL_OPS = ["less", "popcount", "reduce_and", "reduce_or", "reduce_xor"]
 
 
@@ -36,6 +36,12 @@ def _apply(e, name, t, other):
         return e.add(t, other)
     if name == "sub":
         return e.sub(t, other)
+    if name == "mul":
+        return e.mul(t, other)
+    if name == "div":
+        return e.div(t, other)
+    if name == "mod":
+        return e.mod(t, other)
     if name == "less":
         return e.less_than(t, other)
     if name == "popcount":
@@ -78,7 +84,7 @@ def test_fused_matches_eager_random_sequence(width, seed):
 @pytest.mark.parametrize("width", [8, 16, 32])
 def test_fused_all_opcodes_bit_exact(width):
     inputs = _rand_inputs(width, 256, seed=width)
-    seq = ["and", "xor", "or", "add", "sub", "less"]
+    seq = ["and", "xor", "or", "add", "sub", "mul", "div", "mod", "less"]
     tails = ["popcount", "reduce_and", "reduce_or", "reduce_xor"]
     eager = PulsarEngine(width=width)
     fused = PulsarEngine(width=width, fuse=True)
@@ -150,11 +156,12 @@ def test_lazy_array_eq_and_bool_follow_ndarray_semantics():
     assert bool(one)
 
 
-def test_eager_fallback_ops_consume_lazy_operands():
-    """mul/div are outside the fused ISA: they must force materialization
-    and still produce eager-identical results and stats."""
+def test_mul_div_stay_inside_the_fused_flush():
+    """mul/div/mod are in the fused ISA since PR 3: a mixed arithmetic
+    chain records as ONE graph (no eager island, no intermediate
+    materialization) and still matches eager bit-exactly with identical
+    stats."""
     inputs = _rand_inputs(16, 96, seed=11)
-    inputs[1] |= np.uint64(1)  # no div-by-zero
     eager = PulsarEngine(width=16)
     fused = PulsarEngine(width=16, fuse=True)
 
@@ -162,11 +169,40 @@ def test_eager_fallback_ops_consume_lazy_operands():
         t = e.add(inputs[0], inputs[2])
         m = e.mul(t, inputs[1])
         d = e.div(m, inputs[1])
-        s = e.sub(d, t)  # fusion resumes after the eager island
-        return [np.asarray(x, np.uint64) for x in (t, m, d, s)]
+        r = e.mod(m, inputs[1])
+        s = e.sub(d, t)
+        return (t, m, d, r, s)
 
-    for w, g in zip(run(eager), run(fused)):
-        np.testing.assert_array_equal(w, g)
+    want = [np.asarray(x, np.uint64) for x in run(eager)]
+    got = run(fused)
+    # No eager fallback: every handle is still pending before the flush.
+    assert all(isinstance(x, LazyArray) and x._value is None for x in got)
+    assert fused._graph is not None and len(fused._graph.ops) == 5
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, np.asarray(g, np.uint64))
+    assert eager.stats == fused.stats
+
+
+@given(width=st.sampled_from([8, 16, 32]), seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_fused_mul_div_property(width, seed):
+    """Fused mul/div/mod match eager bit-exactly across widths, including
+    div-by-zero lanes and the signed-boundary values (0, 1, 2**(w-1),
+    2**w - 1)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(40, 300))
+    a = rng.integers(0, 1 << width, n, dtype=np.uint64)
+    b = rng.integers(0, 1 << width, n, dtype=np.uint64)
+    edges = np.array([0, 1, 1 << (width - 1), (1 << width) - 1], np.uint64)
+    a[:4], b[:4] = edges, edges[::-1]
+    b[::5] = 0  # div/mod by zero -> 0, the unsigned NumPy semantics
+    eager = PulsarEngine(width=width)
+    fused = PulsarEngine(width=width, fuse=True)
+    for op in ("mul", "div", "mod"):
+        w = np.asarray(getattr(eager, op)(a, b), np.uint64)
+        g = getattr(fused, op)(a, b)
+        assert isinstance(g, LazyArray)
+        np.testing.assert_array_equal(w, np.asarray(g, np.uint64))
     assert eager.stats == fused.stats
 
 
@@ -220,19 +256,64 @@ def test_fuse_requires_fast_backend():
         PulsarEngine(backend="sim", fuse=True)
 
 
-def test_fused_rejects_out_of_width_operands():
-    """Eager ops compute on raw uint64 values; fused computes modulo
-    2**width. Out-of-range operands must fail loudly, not silently
-    truncate into different answers."""
+def test_fused_arithmetic_rejects_out_of_width_operands():
+    """Eager arithmetic computes on raw uint64 values; fused computes
+    modulo 2**width. Out-of-range operands to arithmetic ops must fail
+    loudly, not silently truncate into different answers."""
     e = PulsarEngine(width=8, fuse=True)
+    big = np.array([256, 1], np.uint64)
+    one = np.array([1, 1], np.uint64)
+    for op in (e.add, e.sub, e.mul, e.div, e.mod, e.less_than):
+        with pytest.raises(ValueError, match="modulo"):
+            op(big, one)
     with pytest.raises(ValueError, match="modulo"):
-        e.and_(np.array([256, 1], np.uint64), np.array([1, 1], np.uint64))
-    # eager keeps the raw-uint64 semantics realworld's kernels rely on
-    eager = PulsarEngine(width=8)
-    np.testing.assert_array_equal(
-        eager.and_(np.array([256 + 5], np.uint64),
-                   np.array([260], np.uint64)),
-        np.array([256 + 4], np.uint64))
+        e.popcount(big)
+
+
+def test_fused_planewise_raw_bitmap_path():
+    """and_/or_/xor on out-of-width operands route through the raw
+    packed-bitmap graph (two 32-bit lanes per 64-bit word) instead of
+    rejecting: bit-exact with eager's raw-uint64 semantics — the contract
+    realworld's packed-bitmap kernels (set intersection) rely on."""
+    rng = np.random.default_rng(31)
+    a = rng.integers(0, 2**64, 65, dtype=np.uint64)  # full 64-bit range
+    b = rng.integers(0, 2**64, 65, dtype=np.uint64)
+    c = rng.integers(0, 2**64, 65, dtype=np.uint64)
+    for width in (8, 32):
+        eager = PulsarEngine(width=width)
+        fused = PulsarEngine(width=width, fuse=True)
+
+        def chain(e):
+            t = e.and_(a, b)
+            t = e.xor(t, c)
+            return e.or_(t, b)
+
+        want = np.asarray(chain(eager), np.uint64)
+        got = chain(fused)
+        assert isinstance(got, LazyArray)
+        # one raw graph, no flush between the three plane-wise ops
+        assert fused._graph is not None and fused._graph.raw
+        assert len(fused._graph.ops) == 3
+        np.testing.assert_array_equal(want, np.asarray(got, np.uint64))
+        assert eager.stats == fused.stats  # charged on words, not lanes
+
+
+def test_raw_and_value_graphs_do_not_mix():
+    """A raw packed-bitmap graph flushes before a value-mode op records
+    (and vice versa); arithmetic on a raw out-of-width result still fails
+    loudly at leaf registration."""
+    rng = np.random.default_rng(33)
+    bm = rng.integers(1 << 40, 2**64, 64, dtype=np.uint64)
+    small = rng.integers(0, 256, 64, dtype=np.uint64)
+    e = PulsarEngine(width=32, fuse=True)
+    raw = e.and_(bm, bm)          # raw graph opens
+    assert e._graph.raw
+    t = e.add(small, small)       # value-mode: raw graph flushed first
+    assert raw._value is not None and not e._graph.raw
+    np.testing.assert_array_equal(np.asarray(raw), bm)
+    with pytest.raises(ValueError, match="modulo"):
+        e.add(e.and_(bm, bm), small)  # arithmetic on raw values: loud
+    np.testing.assert_array_equal(np.asarray(t), 2 * small)
 
 
 def test_temporary_operands_do_not_collide():
@@ -312,6 +393,120 @@ def test_pending_lazy_crosses_engines_via_materialization():
     r = e2.xor(t, a)
     np.testing.assert_array_equal(
         np.asarray(r), (((a + a) & np.uint64(0xFFFFFFFF)) ^ a))
+
+
+# --------------------------------------------------------------------- #
+# CSE / dead-node pruning (flush-time graph normalization)
+# --------------------------------------------------------------------- #
+
+
+def test_cse_does_not_change_results_or_stats():
+    """Recording duplicate subexpressions (including commutative twins)
+    must flush to eager-identical values and leave EngineStats exactly as
+    eager charges them — CSE only drops redundant dataplane work."""
+    rng = np.random.default_rng(41)
+    a = rng.integers(0, 1 << 16, 128, dtype=np.uint64)
+    b = rng.integers(0, 1 << 16, 128, dtype=np.uint64)
+    eager = PulsarEngine(width=16)
+    fused = PulsarEngine(width=16, fuse=True)
+
+    def run(e):
+        t1 = e.add(a, b)
+        t2 = e.add(b, a)       # commutative duplicate of t1
+        t3 = e.xor(t1, t2)     # == 0
+        t4 = e.mul(t1, t1)
+        t5 = e.mul(t2, t2)     # duplicate of t4 after t1/t2 unify
+        return [np.asarray(x, np.uint64) for x in (t1, t2, t3, t4, t5)]
+
+    for w, g in zip(run(eager), run(fused)):
+        np.testing.assert_array_equal(w, g)
+    assert eager.stats == fused.stats
+
+
+def test_cse_normalized_programs_share_the_pipeline_cache():
+    """Two recordings that differ only in redundant ops must normalize to
+    the same program and hit the same compiled pipeline."""
+    from repro.kernels import fused_program
+    e = PulsarEngine(width=32, fuse=True)
+    a, b, _ = _rand_inputs(32, 256, seed=43)
+
+    t = e.and_(a, b)
+    keep = e.add(t, a)
+    np.asarray(keep)
+    info = fused_program._cached_pipeline.cache_info()
+
+    t = e.and_(a, b)
+    dup = e.and_(a, b)     # live redundant twin: unified by CSE at flush
+    keep = e.add(t, a)
+    np.asarray(keep)
+    after = fused_program._cached_pipeline.cache_info()
+    assert after.currsize == info.currsize  # no new compiled pipeline
+    assert after.hits == info.hits + 1
+    # both handles materialized from the one computed value
+    np.testing.assert_array_equal(np.asarray(dup), np.asarray(t))
+
+
+def test_optimizer_prunes_dead_leaves_from_the_pipeline():
+    """An op whose handle dies pulls its exclusive leaves out of the
+    compiled program too (fewer pipeline inputs, same results)."""
+    e = PulsarEngine(width=32, fuse=True)
+    a, b, c = _rand_inputs(32, 64, seed=47)
+    keep = e.add(a, b)
+    dead = e.xor(c, c)     # only consumer of leaf c
+    del dead
+    np.testing.assert_array_equal(
+        np.asarray(keep), (a + b) & np.uint64(0xFFFFFFFF))
+
+
+# --------------------------------------------------------------------- #
+# Auto-flush thresholds
+# --------------------------------------------------------------------- #
+
+
+def test_autoflush_graph_size_threshold():
+    """flush_threshold bounds the recorded graph: the op that reaches the
+    bound flushes (its handle materializes eagerly), and recording then
+    continues into a fresh graph — results and stats unchanged."""
+    a, b, c = _rand_inputs(16, 64, seed=51)
+    eager = PulsarEngine(width=16)
+    fused = PulsarEngine(width=16, fuse=True, flush_threshold=3)
+
+    def run(e):
+        t = e.add(a, b)
+        t = e.xor(t, c)
+        t = e.mul(t, b)    # fused: auto-flush fires here
+        t = e.sub(t, a)
+        t = e.or_(t, c)
+        return t
+
+    got = run(fused)
+    assert fused._graph is not None and len(fused._graph.ops) == 2
+    want = run(eager)
+    np.testing.assert_array_equal(np.asarray(want, np.uint64),
+                                  np.asarray(got, np.uint64))
+    assert eager.stats == fused.stats
+
+
+def test_autoflush_memory_threshold():
+    e = PulsarEngine(width=32, fuse=True, flush_memory_bytes=4 * 64 * 4)
+    a, b, _ = _rand_inputs(32, 64, seed=53)
+    t = e.add(a, b)        # 2 leaves + 1 op = 3 held values: under bound
+    assert e._graph is not None
+    t2 = e.add(t, t)       # 4 held values * 4B * 64 lanes: bound reached
+    assert e._graph is None and t2._value is not None
+    np.testing.assert_array_equal(
+        np.asarray(t2), (2 * ((a + b) & np.uint64(0xFFFFFFFF)))
+        & np.uint64(0xFFFFFFFF))
+
+
+def test_autoflush_disabled_with_none():
+    e = PulsarEngine(width=16, fuse=True, flush_threshold=None,
+                     flush_memory_bytes=None)
+    a, b, _ = _rand_inputs(16, 64, seed=55)
+    t = a
+    for _ in range(64):
+        t = e.add(t, b)
+    assert e._graph is not None and len(e._graph.ops) == 64
 
 
 # --------------------------------------------------------------------- #

@@ -184,6 +184,30 @@ def test_serve_engine_end_to_end():
         assert all(0 <= t < cfg.padded_vocab for t in req.out_tokens)
 
 
+def test_serve_pum_bulk_stop_mask_matches_host_path():
+    """The PuM-routed bulk stop predicate (pum_bulk=True, the default)
+    must admit/finish exactly the same token streams as the host loop."""
+    cfg = get_smoke_config("qwen1.5-0.5b")
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 6, dtype=np.int32)
+               for _ in range(3)]
+    outs = []
+    for pum_bulk in (True, False):
+        eng = ServeEngine(cfg, max_batch=2, max_len=32, eos_id=3, seed=0,
+                          pum_bulk=pum_bulk)
+        assert (eng.pum is not None) == pum_bulk
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid=rid, prompt=p, max_new_tokens=5))
+        done = eng.run_until_drained(max_ticks=100)
+        outs.append(sorted((r.rid, tuple(r.out_tokens)) for r in done))
+    assert outs[0] == outs[1]
+    # the bulk bookkeeping was priced on the PuM cost plane
+    eng2 = ServeEngine(cfg, max_batch=2, max_len=32, eos_id=3, seed=0)
+    eng2.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=2))
+    eng2.run_until_drained(max_ticks=20)
+    assert eng2.pum.stats.latency_ns > 0
+
+
 def test_serve_engine_matches_prefill_decode():
     """Engine slot path produces the same tokens as a direct loop."""
     from repro.models.model import decode_step, prefill

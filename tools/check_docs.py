@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Docs link checker: fails on broken *relative* links in README.md and
+docs/*.md.
+
+Checks every ``[text](target)`` markdown link whose target is not an
+absolute URL (``http(s)://``, ``mailto:``):
+
+* the referenced file must exist (relative to the linking file);
+* if the target carries a ``#anchor`` and points at a markdown file, the
+  anchor must match a heading in that file (GitHub slug rules: lowercase,
+  spaces -> dashes, punctuation dropped);
+* bare ``#anchor`` targets are resolved against the linking file itself.
+
+Usage: ``python tools/check_docs.py [root]`` (default: repo root inferred
+from this file's location). Exits 1 listing every broken link.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code ticks, lowercase,
+    drop punctuation, spaces to dashes."""
+    text = re.sub(r"[`*_]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def headings_of(path: pathlib.Path) -> set[str]:
+    return {github_slug(h) for h in HEADING_RE.findall(
+        path.read_text(encoding="utf-8"))}
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errors = []
+    text = path.read_text(encoding="utf-8")
+    for target in LINK_RE.findall(text):
+        if target.startswith(EXTERNAL):
+            continue
+        ref, _, anchor = target.partition("#")
+        dest = path if not ref else (path.parent / ref).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link -> {target} "
+                          f"(missing {dest})")
+            continue
+        if anchor and dest.suffix == ".md":
+            if github_slug(anchor) not in headings_of(dest):
+                errors.append(f"{path}: broken anchor -> {target} "
+                              f"(no heading '#{anchor}' in {dest.name})")
+    return errors
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1
+                        else pathlib.Path(__file__).resolve().parent.parent)
+    files = [root / "README.md"] + sorted((root / "docs").glob("*.md"))
+    errors: list[str] = []
+    checked = 0
+    for f in files:
+        if f.exists():
+            checked += 1
+            errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {checked} files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
