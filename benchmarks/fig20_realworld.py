@@ -11,28 +11,27 @@ from __future__ import annotations
 
 import numpy as np
 
+import repro.pum as pum
 from benchmarks.common import Row, row
 from repro.controller import MemoryController
 from repro.core import realworld
-from repro.core.engine import PulsarEngine
 
 
-# One controller per tREFI, shared across engines/kernels: it is stateless
+# One controller per tREFI, shared across devices/kernels: it is stateless
 # across schedule() calls and its batch_cost cache makes repeat pricing free.
 _CONTROLLERS: dict[float | None, MemoryController] = {}
 
 
-def _engines(trefi: float | None = None):
+def _devices(trefi: float | None = None):
     if trefi not in _CONTROLLERS:
         _CONTROLLERS[trefi] = MemoryController(n_banks=16, trefi=trefi)
     ctrl = _CONTROLLERS[trefi]
-    # fuse=True: the app kernels execute through the fused dataplane
-    # (bit-exact, cost plane invariant — the reported latencies are
-    # unchanged; the host-side dataplane just compiles to fewer passes).
-    return (PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=True,
-                         controller=ctrl, fuse=True),
-            PulsarEngine(mfr="M", width=32, banks=16, use_pulsar=False,
-                         controller=ctrl, fuse=True))
+    # fuse=True (the EngineConfig default): the app kernels execute through
+    # the fused dataplane (bit-exact, cost plane invariant — the reported
+    # latencies are unchanged; the host-side dataplane just compiles to
+    # fewer passes). One PULSAR device + one FracDRAM-configured twin.
+    cfg = pum.EngineConfig(mfr="M", width=32, banks=16, controller=ctrl)
+    return (pum.device(cfg), pum.device(cfg.replace(use_pulsar=False)))
 
 
 def run() -> list[Row]:
@@ -40,7 +39,7 @@ def run() -> list[Row]:
     rows: list[Row] = []
 
     def emit(name, fn, *args, **kw):
-        pul, frac = _engines()
+        pul, frac = _devices()
         _, p_ms, cpu_ms = fn(pul, *args, **kw)
         _, f_ms, _ = fn(frac, *args, **kw)
         r_ms = pul.stats.refresh_stall_ns * 1e-6
@@ -69,7 +68,7 @@ def run() -> list[Row]:
          np.array([20, 90, 160, 230]))
 
     # XNOR-Net conv layers (op-count model): LeNet-5 + VGG-13-ish layer.
-    pul, frac = _engines()
+    pul, frac = _devices()
     for name, spec in {"xnor_lenet_c3": (6, 16, 5, 5, 10, 10),
                        "xnor_vgg_l5": (256, 256, 3, 3, 8, 8)}.items():
         p_ms = realworld.xnor_conv_cost(pul, *spec)
@@ -82,7 +81,7 @@ def run() -> list[Row]:
     # Refresh interference is tREFI-dependent: halving tREFI (hot-temp 2x
     # refresh) roughly doubles the REF stall on the same kernel.
     for trefi in (7800.0, 3900.0):
-        pul, _ = _engines(trefi=trefi)
+        pul, _ = _devices(trefi=trefi)
         _, p_ms, _ = realworld.bmi_active_users(pul, bitmaps)
         rows.append(row(
             f"fig20.refresh_trefi{int(trefi)}", p_ms * 1e3,

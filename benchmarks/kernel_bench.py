@@ -6,7 +6,8 @@ Derived column reports effective Gbit/s over the bitline lanes.
 Also benchmarks the engine dataplane end to end: a 16-op program through the
 eager per-op path (Python dispatch + NumPy temporaries per op) vs the fused
 lazy op-graph pipeline (one jit trace, transpose in/out once) — the §5.2
-command-stream-economy argument applied to the host dataplane."""
+command-stream-economy argument applied to the host dataplane. Programs are
+written against the public ``repro.pum`` operator frontend (`PumArray`)."""
 
 from __future__ import annotations
 
@@ -14,33 +15,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.pum as pum
 from benchmarks.common import Row, row, timed_us
 from repro.core import realworld
-from repro.core.engine import PulsarEngine
 from repro.kernels import ref
 
 W = 1 << 16  # packed words per plane = 2M bitlines
 
 
-def _engine_prog16(e, a, b, c):
-    """16 engine ops (the fused-pipeline staple): logicals + ripple
+def _engine_prog16(dev, a, b, c):
+    """16 PuM ops (the fused-pipeline staple): logicals + ripple
     adds/subs + popcount chained over three operands."""
-    t = e.and_(a, b)
-    t = e.xor(t, c)
-    t = e.or_(t, b)
-    t = e.add(t, a)
-    t = e.sub(t, c)
-    t = e.xor(t, b)
-    t = e.and_(t, a)
-    t = e.add(t, c)
-    t = e.or_(t, a)
-    t = e.sub(t, b)
-    t = e.xor(t, a)
-    t = e.and_(t, c)
-    t = e.add(t, b)
-    t = e.popcount(t)
-    t = e.add(t, a)
-    t = e.xor(t, c)
+    a = dev.asarray(a)
+    t = a & b
+    t = t ^ c
+    t = t | b
+    t = t + a
+    t = t - c
+    t = t ^ b
+    t = t & a
+    t = t + c
+    t = t | a
+    t = t - b
+    t = t ^ a
+    t = t & c
+    t = t + b
+    t = t.popcount()
+    t = t + a
+    t = t ^ c
     return t
 
 
@@ -49,14 +51,14 @@ def _bench_fused_vs_eager() -> list[Row]:
     n = 32 * W  # one full plane set: 2M elements = 2M bitlines
     a, b, c = (rng.integers(0, 2**32, n, dtype=np.uint64) for _ in range(3))
 
-    eager = PulsarEngine(width=32)
-    fused = PulsarEngine(width=32, fuse=True)
+    eager = pum.device(width=32, fuse=False)
+    fused = pum.device(width=32, fuse=True)
 
     def run_eager():
-        return np.asarray(_engine_prog16(eager, a, b, c))
+        return _engine_prog16(eager, a, b, c).to_numpy()
 
     def run_fused():
-        return np.asarray(_engine_prog16(fused, a, b, c))
+        return _engine_prog16(fused, a, b, c).to_numpy()
 
     want = run_eager()
     got = run_fused()  # warm-up: compiles the pipeline once
@@ -75,25 +77,27 @@ def _bench_fused_vs_eager() -> list[Row]:
     return rows
 
 
-def _engine_mulprog16(e, a, b, c):
-    """16 engine ops centred on the newly-fused mul/div/mod lowering
-    (shift-add multiply, restoring division) mixed with the cheaper ISA."""
-    t = e.mul(a, b)
-    t = e.add(t, c)
-    t = e.mul(t, a)
-    t = e.sub(t, b)
-    t = e.div(t, c)
-    t = e.xor(t, a)
-    t = e.mul(t, c)
-    t = e.or_(t, b)
-    t = e.mod(t, a)
-    t = e.add(t, b)
-    t = e.mul(t, t)
-    t = e.and_(t, c)
-    t = e.div(t, b)
-    t = e.add(t, a)
-    t = e.mul(t, b)
-    t = e.xor(t, c)
+def _engine_mulprog16(dev, a, b, c):
+    """16 PuM ops centred on the fused mul/div/mod lowering (shift-add
+    multiply, restoring division via the shared divmod tuple op) mixed
+    with the cheaper ISA."""
+    a = dev.asarray(a)
+    t = a * b
+    t = t + c
+    t = t * a
+    t = t - b
+    t = t // c
+    t = t ^ a
+    t = t * c
+    t = t | b
+    t = t % a
+    t = t + b
+    t = t * t
+    t = t & c
+    t = t // b
+    t = t + a
+    t = t * b
+    t = t ^ c
     return t
 
 
@@ -104,14 +108,14 @@ def _bench_fused_mul() -> list[Row]:
     width = 16
     a, b, c = (rng.integers(0, 1 << width, n, dtype=np.uint64)
                for _ in range(3))
-    eager = PulsarEngine(width=width)
-    fused = PulsarEngine(width=width, fuse=True)
+    eager = pum.device(width=width, fuse=False)
+    fused = pum.device(width=width, fuse=True)
 
     def run_eager():
-        return np.asarray(_engine_mulprog16(eager, a, b, c))
+        return _engine_mulprog16(eager, a, b, c).to_numpy()
 
     def run_fused():
-        return np.asarray(_engine_mulprog16(fused, a, b, c))
+        return _engine_mulprog16(fused, a, b, c).to_numpy()
 
     want, got = run_eager(), run_fused()  # warm-up compiles the pipeline
     ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
@@ -142,8 +146,8 @@ def _bench_app_kernels() -> list[Row]:
     for name, fn, args in (
             ("bmi", realworld.bmi_active_users, (bitmaps,)),
             ("kclique", realworld.kclique_star, (adj, cliques))):
-        eager = PulsarEngine(width=32)
-        fused = PulsarEngine(width=32, fuse=True)
+        eager = pum.device(width=32, fuse=False)
+        fused = pum.device(width=32, fuse=True)
         fn(fused, *args)  # warm-up: compiles the fused pipeline once
         us_e, _ = timed_us(lambda: fn(eager, *args))
         us_f, _ = timed_us(lambda: fn(fused, *args))

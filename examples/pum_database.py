@@ -2,7 +2,8 @@
 
   PYTHONPATH=src python examples/pum_database.py
 
-Runs the paper's two database workloads on the PULSAR engine:
+Runs the paper's two database workloads on the PULSAR engine through the
+public ``repro.pum`` API:
   * BMI   — bitmap-index query "users active every day this month",
   * BW    — BitWeaving predicate scan count(*) where c1 <= v <= c2,
 plus the graph set-intersection (triangle counting) — with PuM latency from
@@ -11,42 +12,42 @@ the calibrated cost model vs this host's NumPy time for context.
 
 import numpy as np
 
+import repro.pum as pum
 from repro.core import realworld
-from repro.core.engine import PulsarEngine
 
 
 def main() -> None:
     rng = np.random.default_rng(7)
-    # fuse=True (the default for the app/serving stacks): op chains record
-    # into one fused program per materialization; results and cost-plane
-    # numbers are identical to eager mode.
-    engine = PulsarEngine(mfr="M", width=32, banks=16, fuse=True)
+    # fuse=True is the EngineConfig default: op chains record into one
+    # fused program per materialization; results and cost-plane numbers
+    # are identical to eager mode. The `with` scope auto-flushes on exit.
+    with pum.device(mfr="M", width=32, banks=16) as dev:
+        print("== Bitmap index (BMI): daily-active-users query ==")
+        n_users = 8_000_000
+        days = 30
+        bitmaps = rng.integers(0, 2**63, (days, n_users // 64),
+                               dtype=np.uint64)
+        count, pum_ms, cpu_ms = realworld.bmi_active_users(dev, bitmaps)
+        print(f"{n_users:,} users x {days} days -> {count:,} always-active")
+        print(f"PuM {pum_ms:.2f} ms (16 banks) | host numpy {cpu_ms:.2f} ms")
 
-    print("== Bitmap index (BMI): daily-active-users query ==")
-    n_users = 8_000_000
-    days = 30
-    bitmaps = rng.integers(0, 2**63, (days, n_users // 64), dtype=np.uint64)
-    count, pum_ms, cpu_ms = realworld.bmi_active_users(engine, bitmaps)
-    print(f"{n_users:,} users x {days} days -> {count:,} always-active")
-    print(f"PuM {pum_ms:.2f} ms (16 banks) | host numpy {cpu_ms:.2f} ms")
+        print("\n== BitWeaving scan: count(*) where 10_000 <= v <= 60_000 ==")
+        col = rng.integers(0, 100_000, 1_000_000, dtype=np.uint64)
+        count, pum_ms, cpu_ms = realworld.bitweaving_scan(dev, col,
+                                                          10_000, 60_000)
+        print(f"1M-row column -> {count:,} matches")
+        print(f"PuM {pum_ms:.2f} ms | host numpy {cpu_ms:.2f} ms")
 
-    print("\n== BitWeaving scan: count(*) where 10_000 <= v <= 60_000 ==")
-    col = rng.integers(0, 100_000, 1_000_000, dtype=np.uint64)
-    count, pum_ms, cpu_ms = realworld.bitweaving_scan(engine, col,
-                                                      10_000, 60_000)
-    print(f"1M-row column -> {count:,} matches")
-    print(f"PuM {pum_ms:.2f} ms | host numpy {cpu_ms:.2f} ms")
+        print("\n== Triangle counting (set-centric AND + popcount) ==")
+        n = 96
+        adj = np.triu((rng.random((n, n)) < 0.15).astype(np.uint8), 1)
+        tri, pum_ms, cpu_ms = realworld.triangle_count(dev, adj + adj.T)
+        print(f"{n}-vertex graph -> {tri} triangles")
+        print(f"PuM {pum_ms:.2f} ms | host numpy {cpu_ms:.2f} ms")
 
-    print("\n== Triangle counting (set-centric AND + popcount) ==")
-    n = 96
-    adj = np.triu((rng.random((n, n)) < 0.15).astype(np.uint8), 1)
-    tri, pum_ms, cpu_ms = realworld.triangle_count(engine, adj + adj.T)
-    print(f"{n}-vertex graph -> {tri} triangles")
-    print(f"PuM {pum_ms:.2f} ms | host numpy {cpu_ms:.2f} ms")
-
-    st = engine.stats
-    print(f"\nengine session: {st.n_sequences:,} row-activation sequences, "
-          f"stable-lane efficiency {st.lane_efficiency:.3f}")
+        st = dev.stats
+        print(f"\ndevice session: {st.n_sequences:,} row-activation "
+              f"sequences, stable-lane efficiency {st.lane_efficiency:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,202 @@
+"""Pluggable backend registry: capability lookup for dataplane evaluators.
+
+Before this module existed, backend selection was hard-coded: the engine
+branched on ``backend == "sim"`` to build the chip-model ALU, and
+``kernels/fused_program.py`` branched on ``jax.default_backend() == "tpu"``
+to pick the Pallas vertical evaluator over the word-domain one. Adding a
+new evaluator (a width-64 plane backend, a multi-device sharded pipeline)
+meant editing both call sites.
+
+Now every evaluator is a registered :class:`BackendSpec` and the call
+sites *look capabilities up*:
+
+* the engine resolves its ``backend=`` name to an **eager dataplane**
+  builder (capability ``"eager"``), which returns either ``None`` (compute
+  on packed NumPy words — the ``"fast"`` default) or an ALU-protocol
+  object (the bit-exact ``"sim"`` chip model);
+* the fused pipeline resolves a :class:`FusedProgram` to a **fused
+  evaluator** (capability ``"fused"``) by :func:`select_backend` — the
+  highest-priority available backend whose ``max_width`` covers the
+  program.
+
+A future backend is an additive ``register_backend(...)`` call — no
+engine or compiler edits. The full contract (builder signatures per
+capability) is documented in ``docs/api.md``; ``repro.pum`` re-exports
+the registry functions as the public surface.
+
+This module is intentionally dependency-free (no repro imports at module
+level): builders import their implementation lazily so the registry can
+be imported from anywhere in the stack without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """One registered backend.
+
+    ``builder`` signature depends on capability:
+
+    * ``"eager"`` backends: ``builder(engine) -> alu | None`` — called at
+      ``PulsarEngine`` construction. Return ``None`` for the packed-NumPy
+      word dataplane, or an object with the ``BitSerialAlu`` protocol
+      (``words``, ``load``/``store``, ``and_``/``or_``/``xor``/``add``/
+      ``sub``/``mul``/``div``) to route small operands through it.
+    * ``"fused"`` backends: ``builder(program, interpret=..., donate=...)
+      -> fn(*leaves) -> tuple(outs)`` — called (and cached) per program
+      structure by ``fused_program.get_pipeline``. Leaves/outputs are flat
+      int32 arrays of packed horizontal words.
+
+    ``available`` gates automatic selection (e.g. the Pallas evaluator is
+    only auto-selected on a TPU host); an unavailable backend can still be
+    requested by name. ``max_width`` bounds the element width the backend
+    can evaluate; ``priority`` breaks ties (higher wins).
+    """
+    name: str
+    builder: Callable[..., Any]
+    capabilities: frozenset[str]
+    max_width: int = 32
+    priority: int = 0
+    available: Callable[[], bool] = lambda: True
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(name: str, builder: Callable[..., Any], *,
+                     capabilities=("fused",), max_width: int = 32,
+                     priority: int = 0,
+                     available: Callable[[], bool] | None = None
+                     ) -> BackendSpec:
+    """Register (or replace) a backend under ``name`` and return its spec.
+
+    Re-registering an existing name replaces it — callers own their
+    namespace; the built-in names are ``fast``, ``sim``, ``words-cpu``,
+    ``pallas-tpu`` and ``ref-vertical``.
+    """
+    spec = BackendSpec(name=name, builder=builder,
+                       capabilities=frozenset(capabilities),
+                       max_width=max_width, priority=priority,
+                       available=available or (lambda: True))
+    _REGISTRY[name] = spec
+    return spec
+
+
+def unregister_backend(name: str) -> None:
+    """Remove a registered backend (mainly for tests)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: "
+            f"{sorted(_REGISTRY)} (register_backend() adds new ones)"
+        ) from None
+
+
+def available_backends(capability: str | None = None) -> tuple[str, ...]:
+    """Names of registered backends, optionally filtered by capability
+    (registration order; includes unavailable ones — availability is a
+    host property, registration is not)."""
+    return tuple(n for n, s in _REGISTRY.items()
+                 if capability is None or capability in s.capabilities)
+
+
+def select_backend(*, require, width: int | None = None) -> BackendSpec:
+    """Capability lookup: the highest-priority *available* backend whose
+    capabilities cover ``require`` and whose ``max_width`` covers
+    ``width``. Raises ``LookupError`` when nothing matches."""
+    need = frozenset((require,) if isinstance(require, str) else require)
+    best: BackendSpec | None = None
+    for spec in _REGISTRY.values():
+        if not need <= spec.capabilities:
+            continue
+        if width is not None and spec.max_width < width:
+            continue
+        if not spec.available():
+            continue
+        if best is None or spec.priority > best.priority:
+            best = spec
+    if best is None:
+        raise LookupError(
+            f"no available backend with capabilities {sorted(need)}"
+            + (f" at width {width}" if width is not None else "")
+            + f"; registered: {sorted(_REGISTRY)}")
+    return best
+
+
+# --------------------------------------------------------------------- #
+# Built-in backends. Builders import lazily: the registry stays
+# import-cycle-free and costs nothing until a backend is actually used.
+# --------------------------------------------------------------------- #
+
+
+def _build_fast_dataplane(engine) -> None:
+    """Packed-NumPy word dataplane: the engine computes ops directly on
+    uint64 ndarrays (and fuses through the lazy op graph when asked)."""
+    return None
+
+
+def _build_sim_dataplane(engine):
+    """Bit-exact chip-model dataplane: a small simulated DRAM region with
+    the dual-rail bit-serial ALU on top (cycle-exact command accounting)."""
+    from repro.core.alu import BitSerialAlu
+    from repro.core.chip import PulsarChip
+    from repro.core.geometry import DramGeometry
+    from repro.core.pulsar import PulsarExecutor
+    geom = DramGeometry(row_bits=min(engine.row_bits, 2048),
+                        rows_per_subarray=512, subarrays_per_bank=2,
+                        banks=2)
+    chip = PulsarChip(geom, engine.profile, seed=engine.seed)
+    chip.decoder = chip.decoder.__class__(geom, engine.profile, None)
+    return BitSerialAlu(PulsarExecutor(chip, 0, 0), width=engine.width)
+
+
+def _build_words_pipeline(program, interpret: bool = False,
+                          donate: bool = False):
+    from repro.kernels import fused_program
+    return fused_program.build_words_pipeline(program, donate=donate)
+
+
+def _build_pallas_pipeline(program, interpret: bool = False,
+                           donate: bool = False):
+    from repro.kernels import fused_program
+    return fused_program.build_vertical_pipeline(
+        program, use_pallas=True, interpret=interpret, donate=donate)
+
+
+def _build_ref_vertical_pipeline(program, interpret: bool = False,
+                                 donate: bool = False):
+    from repro.kernels import fused_program
+    return fused_program.build_vertical_pipeline(
+        program, use_pallas=False, interpret=interpret, donate=donate)
+
+
+def on_tpu() -> bool:
+    """The one TPU-detection rule: gates Pallas auto-selection here and
+    the interpret-mode fallback in kernels/{ops,fused_program}.py."""
+    import jax
+    return jax.default_backend() == "tpu"
+
+
+register_backend("fast", _build_fast_dataplane,
+                 capabilities=("eager",), max_width=64, priority=10)
+register_backend("sim", _build_sim_dataplane,
+                 capabilities=("eager", "sim"), max_width=64)
+register_backend("words-cpu", _build_words_pipeline,
+                 capabilities=("fused",), max_width=32, priority=10)
+register_backend("pallas-tpu", _build_pallas_pipeline,
+                 capabilities=("fused", "vertical"), max_width=32,
+                 priority=20, available=on_tpu)
+# The vertical jnp oracle: never auto-selected (it exists to validate the
+# other two), but requestable by name — get_pipeline(force_vertical=True).
+register_backend("ref-vertical", _build_ref_vertical_pipeline,
+                 capabilities=("fused", "vertical", "debug"), max_width=32,
+                 priority=-10, available=lambda: False)

@@ -1,4 +1,12 @@
-"""PulsarEngine — the user-facing PuM compute API.
+"""PulsarEngine — the PuM compute engine behind the ``repro.pum`` API.
+
+The public way to use this system is :mod:`repro.pum` (``PumArray``
+operator frontend + ``Device``/``EngineConfig`` + the backend registry);
+``PulsarEngine``'s dataplane *method* surface (``add``/``and_``/…) is kept
+as a thin compat shim that emits ``DeprecationWarning`` and delegates to
+the private implementations the new API calls directly. Construction,
+``stats``/``reset_stats``, ``flush`` and the cost-plane helpers
+(``op_effective_ns``) are NOT deprecated — ``Device`` wraps them.
 
 Two coupled planes:
   * dataplane: bit-exact results. ``backend="fast"`` computes on packed
@@ -48,19 +56,27 @@ the caller-visible element count before the dataplane splits lanes.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 import weakref
 
 import numpy as np
 
-from repro.core.alu import BitSerialAlu
+from repro.backends import get_backend
 from repro.core.charact import SuccessRateDb, default_db
-from repro.core.chip import PulsarChip
 from repro.core.cost_model import CostModel, OpCost, ZERO
-from repro.core.geometry import DramGeometry, PAPER_MODULE
+from repro.core.geometry import PAPER_MODULE
 from repro.core.profiles import PROFILES
-from repro.core.pulsar import PulsarExecutor
 from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
                                          optimize_program)
+
+
+def _warn_deprecated(method: str, replacement: str) -> None:
+    """One-line compat-shim warning: the PulsarEngine op methods survive
+    for out-of-tree callers, but in-repo code goes through repro.pum."""
+    warnings.warn(
+        f"PulsarEngine.{method}() is deprecated; use {replacement} "
+        f"(repro.pum — migration table in docs/api.md)",
+        DeprecationWarning, stacklevel=3)
 
 
 @dataclasses.dataclass
@@ -178,6 +194,10 @@ class LazyArray:
         return f"LazyArray(shape={self.shape}, {state})"
 
 
+def _DEAD_REF():  # weakref stand-in for ops that must never be outputs
+    return None
+
+
 class _OpGraph:
     """Recording buffer for one fused program: leaf operand arrays plus the
     op list, with weakrefs to the handed-out LazyArrays (ops whose handle
@@ -239,9 +259,11 @@ class _OpGraph:
         return ("leaf", i)
 
     def add_op(self, opcode: str, args: tuple, param: int,
-               out: "LazyArray") -> int:
+               out: "LazyArray", internal: bool = False) -> int:
         self.ops.append((opcode, args, param))
-        self.results.append(weakref.ref(out))
+        # Internal ops (tuple values feeding selectors) record a dead ref:
+        # they can never be materialized as a program output.
+        self.results.append(_DEAD_REF if internal else weakref.ref(out))
         return len(self.ops) - 1
 
 
@@ -257,23 +279,33 @@ class PulsarEngine:
 
     With ``fuse=True`` ops return :class:`LazyArray` handles and execute
     as one compiled program per :meth:`flush` — bit-exact and
-    stats-identical to eager, including division by zero:
+    stats-identical to eager, including division by zero. The public way
+    in is :mod:`repro.pum` (div-by-zero yields 0, as in eager NumPy; a
+    ``divmod`` shares one restoring-division pass):
 
     >>> import numpy as np
-    >>> e = PulsarEngine(width=16, fuse=True)
-    >>> q = e.div(np.array([1000, 7], np.uint64),
-    ...           np.array([6, 0], np.uint64))
-    >>> np.asarray(q)                    # x // 0 == 0, as in eager NumPy
+    >>> import repro.pum as pum
+    >>> with pum.device(mfr="M", width=16, fuse=True) as dev:
+    ...     q, r = divmod(dev.asarray(np.array([1000, 7], np.uint64)),
+    ...                   np.array([6, 0], np.uint64))
+    >>> np.asarray(q)
     array([166,   0], dtype=uint64)
-    >>> e2 = PulsarEngine(width=16)      # eager twin: identical charges
-    >>> _ = e2.div(np.array([1000, 7], np.uint64),
-    ...            np.array([6, 0], np.uint64))
-    >>> e.stats == e2.stats
+    >>> int(r.to_numpy()[0])
+    4
+    >>> with pum.device(width=16, fuse=False) as dev2:   # eager twin
+    ...     _ = divmod(dev2.asarray(np.array([1000, 7], np.uint64)),
+    ...                np.array([6, 0], np.uint64))
+    >>> dev.stats == dev2.stats          # identical cost-plane charges
     True
 
     ``flush_threshold`` (recorded ops) and ``flush_memory_bytes``
     (estimated graph footprint) auto-flush oversized graphs; pass ``None``
-    to disable either bound.
+    to disable either bound. ``donate_leaves=True`` donates the fused
+    pipeline's leaf device buffers to the compiled trace (cuts peak
+    memory; bit-exactness unaffected — the engine's snapshots live on the
+    host). The ``backend`` name resolves through the ``repro.backends``
+    registry (capability ``"eager"``): ``"fast"`` computes on packed
+    NumPy words, ``"sim"`` routes through the bit-exact chip model.
     """
 
     def __init__(self, mfr: str = "M", width: int = 32,
@@ -283,13 +315,15 @@ class PulsarEngine:
                  use_pulsar: bool = True, chained: bool = False,
                  controller=None, seed: int = 0, fuse: bool = False,
                  flush_threshold: int | None = 1024,
-                 flush_memory_bytes: int | None = 1 << 30):
+                 flush_memory_bytes: int | None = 1 << 30,
+                 donate_leaves: bool = False):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
         self.row_bits = row_bits
         self.banks = banks
         self.backend = backend
+        self.seed = seed
         self.use_pulsar = use_pulsar  # False => FracDRAM baseline costs
         self.chained = chained and use_pulsar  # chained-staging (§Perf P4)
         # controller="auto" builds a MemoryController over `banks` banks;
@@ -304,23 +338,43 @@ class PulsarEngine:
         self.stats = EngineStats()
         self._best_cfg_cache: dict[int, tuple[int, int, float]] = {}
         self._batch_cache: dict[tuple, object] = {}
-        if fuse and backend != "fast":
-            raise ValueError("fuse=True requires backend='fast'")
+        # Eager-dataplane backend by registry lookup: the builder returns
+        # None for the packed-NumPy word dataplane or an ALU-protocol
+        # object (see repro.backends.BackendSpec) to route ops through.
+        spec = get_backend(backend)
+        if "eager" not in spec.capabilities:
+            raise ValueError(
+                f"backend {backend!r} has no eager dataplane "
+                f"(capabilities: {sorted(spec.capabilities)})")
+        if width > spec.max_width:
+            raise ValueError(
+                f"backend {backend!r} supports width <= {spec.max_width}, "
+                f"got {width}")
+        if not spec.available():
+            raise ValueError(f"backend {backend!r} is registered but not "
+                             f"available on this host")
+        self._alu = spec.builder(self)
+        if fuse and self._alu is not None:
+            raise ValueError(
+                f"fuse=True requires an eager word-dataplane backend "
+                f"(builder returns None, e.g. 'fast'); backend "
+                f"{backend!r} routes ops through an ALU and stays "
+                f"per-op")
         if fuse and width > 32:
-            raise ValueError("fused pipeline supports width <= 32")
+            # The fused leaf packing is 32-bit (snapshots land in uint32
+            # lanes), so no registered evaluator can cover wider values
+            # yet; generalizing the packing is the ROADMAP width-64 item.
+            # pum.Device falls back to eager automatically.
+            raise ValueError(
+                "fused pipeline supports width <= 32 (32-bit leaf "
+                "packing); use fuse=False for wider values")
         if flush_threshold is not None and flush_threshold < 1:
             raise ValueError("flush_threshold must be >= 1 or None")
         self.fuse = fuse
         self.flush_threshold = flush_threshold
         self.flush_memory_bytes = flush_memory_bytes
+        self.donate_leaves = donate_leaves
         self._graph: _OpGraph | None = None
-        if backend == "sim":
-            geom = DramGeometry(row_bits=min(row_bits, 2048),
-                                rows_per_subarray=512, subarrays_per_bank=2,
-                                banks=2)
-            chip = PulsarChip(geom, self.profile, seed=seed)
-            chip.decoder = chip.decoder.__class__(geom, self.profile, None)
-            self._alu = BitSerialAlu(PulsarExecutor(chip, 0, 0), width=width)
 
     # ------------------------------------------------------------------ #
     # Cost plumbing
@@ -512,9 +566,17 @@ class PulsarEngine:
         return any(self._is_raw_operand(x) for x in operands)
 
     def _record(self, opcode: str, operands: tuple, param: int = 0,
-                raw: bool = False) -> LazyArray:
+                raw: bool = False, defer_flush: bool = False,
+                internal: bool = False) -> LazyArray:
         """Append one op to the lazy graph (starting/flushing as needed)
-        and hand back its LazyArray."""
+        and hand back its LazyArray.
+
+        ``defer_flush`` skips the auto-flush threshold check so a multi-op
+        lowering (divmod -> selectors) records atomically — a flush
+        between the tuple op and its selector would try to materialize a
+        tuple value. ``internal=True`` marks an op that must never be a
+        program output (its handle only carries the op index for selector
+        args): it records a dead weakref so flush() can't see it live."""
         shape = operands[0].shape
         n = operands[0].size * (2 if raw else 1)  # dataplane lanes
         g = self._graph
@@ -536,8 +598,8 @@ class PulsarEngine:
                 arr = x.materialize() if isinstance(x, LazyArray) else x
                 args.append(g.leaf_id(arr))
         out = LazyArray(self, g, len(g.ops), shape)
-        g.add_op(opcode, tuple(args), param, out)
-        if self._graph_over_threshold(g):
+        g.add_op(opcode, tuple(args), param, out, internal=internal)
+        if not defer_flush and self._graph_over_threshold(g):
             self.flush()  # auto-flush: `out` is live, so it materializes
         return out
 
@@ -590,7 +652,7 @@ class PulsarEngine:
                 flat = np.pad(flat, (0, pad))
             leaves.append(flat.view(np.int32))
         try:
-            outs = get_pipeline(program)(*leaves)
+            outs = get_pipeline(program, donate=self.donate_leaves)(*leaves)
         except BaseException:
             # Keep pending handles recoverable after a transient failure
             # (interrupt, backend OOM): restore the graph so a later
@@ -624,50 +686,90 @@ class PulsarEngine:
             return self._record(opcode, (a, b))
         return self._run2(opcode, self._force(a), self._force(b), np_fn)
 
-    def and_(self, a, b):
+    # -- private implementations (the repro.pum bridge) ----------------- #
+
+    def _and(self, a, b):
         return self._binary("and2", "and", a, b, lambda x, y: x & y)
 
-    def or_(self, a, b):
+    def _or(self, a, b):
         return self._binary("or2", "or", a, b, lambda x, y: x | y)
 
-    def xor(self, a, b):
+    def _xor(self, a, b):
         return self._binary("xor2", "xor", a, b, lambda x, y: x ^ y)
 
-    def add(self, a, b):
+    def _add(self, a, b):
         return self._binary("add", "add", a, b,
                             lambda x, y: (x + y) & self._mask(self.width))
 
-    def sub(self, a, b):
+    def _sub(self, a, b):
         return self._binary("add", "sub", a, b,
                             lambda x, y: (x - y) & self._mask(self.width))
 
-    def mul(self, a, b):
+    def _mul(self, a, b):
         return self._binary("mul", "mul", a, b,
                             lambda x, y: (x * y) & self._mask(self.width))
 
-    def div(self, a, b):
-        """Unsigned floor division; lanes dividing by zero yield 0 (the
-        NumPy unsigned semantics, preserved bit-exactly when fused)."""
-        with np.errstate(divide="ignore"):
-            return self._binary("div", "div", a, b, lambda x, y: x // y)
-
-    def mod(self, a, b):
-        """Unsigned remainder, priced as one division (the restoring
-        divider computes the remainder alongside the quotient, so the
-        cost model charges the same pass); lanes with a zero divisor
-        yield 0. Note div+mod of the same operands record as two IR ops —
-        a shared divmod tuple op is a ROADMAP item."""
+    def _divpart(self, a, b, which: str):
+        """div or mod: ONE restoring-division charge; in fused mode the op
+        lowers to the shared ``divmod`` tuple op plus a selector, so
+        ``a // b`` and ``a % b`` of the same operands CSE into one divider
+        pass at flush."""
+        a, b = self._coerce(a), self._coerce(b)
+        self._charge("div", a.size)
+        if self._can_fuse(a, b):
+            pair = self._record("divmod", (a, b), defer_flush=True,
+                                internal=True)
+            return self._record("fst" if which == "div" else "snd", (pair,))
         with np.errstate(divide="ignore", invalid="ignore"):
-            return self._binary("div", "mod", a, b, lambda x, y: x % y)
+            fn = (lambda x, y: x // y) if which == "div" \
+                else (lambda x, y: x % y)
+            return self._run2(which, self._force(a), self._force(b), fn)
 
-    def less_than(self, a, b):
+    def _div(self, a, b):
+        return self._divpart(a, b, "div")
+
+    def _mod(self, a, b):
+        return self._divpart(a, b, "mod")
+
+    def _divmod(self, a, b):
+        """(quotient, remainder) for ONE division charge: the restoring
+        divider produces both in the same pass (fused: one ``divmod``
+        tuple op + two selectors; eager: one charge, two NumPy ops)."""
+        a, b = self._coerce(a), self._coerce(b)
+        self._charge("div", a.size)
+        if self._can_fuse(a, b):
+            pair = self._record("divmod", (a, b), defer_flush=True,
+                                internal=True)
+            q = self._record("fst", (pair,), defer_flush=True)
+            r = self._record("snd", (pair,))
+            return q, r
+        with np.errstate(divide="ignore", invalid="ignore"):
+            af, bf = self._force(a), self._force(b)
+            if self._alu is not None and af.size <= self._alu.words * 32:
+                # One restoring-division pass on the sim ALU yields both.
+                # The ALU's divider assumes nonzero divisors; mask those
+                # lanes to 0 to keep the engine-wide x//0 == x%0 == 0
+                # contract (unsigned NumPy semantics) on every backend.
+                va, vb = self._alu_load2(af, bf)
+                vq, vr = self._alu.div(va, vb)
+                zero = bf == 0
+                out = (np.where(zero, np.uint64(0),
+                                self._alu_store(vq, af)),
+                       np.where(zero, np.uint64(0),
+                                self._alu_store(vr, af)))
+                for v in (vq, vr, va, vb):
+                    self._alu.free(v)  # return the subarray rows
+                return out
+            return (af // bf, af % bf)
+
+    def _less_than(self, a, b):
         a, b = self._coerce(a), self._coerce(b)
         self._charge("compare", a.size)
         if self._can_fuse(a, b):
             return self._record("less", (a, b))
         return (self._force(a) < self._force(b)).astype(np.uint64)
 
-    def popcount(self, a, width: int | None = None):
+    def _popcount(self, a, width: int | None = None):
         a = self._coerce(a)
         w = width or self.width
         self._charge("popcount", a.size, n_planes=w)
@@ -675,8 +777,7 @@ class PulsarEngine:
             return self._record("popcount", (a,))
         return _vec_popcount(self._force(a))
 
-    def reduce_bits(self, a, kind: str, width: int | None = None):
-        """Per-element AND/OR/XOR reduction across the element's bits."""
+    def _reduce_bits(self, a, kind: str, width: int | None = None):
         a = self._coerce(a)
         w = width or self.width
         self._charge(f"reduce_{kind}", a.size, n_planes=w)
@@ -691,19 +792,107 @@ class PulsarEngine:
         pc = _vec_popcount(a)
         return pc & np.uint64(1)
 
+    # -- deprecated compat shim (the pre-repro.pum method surface) ------ #
+    # Each method is a one-line delegate that warns once per call site;
+    # semantics are identical to the private implementations above.
+
+    def and_(self, a, b):
+        """Deprecated: use ``&`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("and_", "PumArray.__and__ (a & b)")
+        return self._and(a, b)
+
+    def or_(self, a, b):
+        """Deprecated: use ``|`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("or_", "PumArray.__or__ (a | b)")
+        return self._or(a, b)
+
+    def xor(self, a, b):
+        """Deprecated: use ``^`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("xor", "PumArray.__xor__ (a ^ b)")
+        return self._xor(a, b)
+
+    def add(self, a, b):
+        """Deprecated: use ``+`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("add", "PumArray.__add__ (a + b)")
+        return self._add(a, b)
+
+    def sub(self, a, b):
+        """Deprecated: use ``-`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("sub", "PumArray.__sub__ (a - b)")
+        return self._sub(a, b)
+
+    def mul(self, a, b):
+        """Deprecated: use ``*`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("mul", "PumArray.__mul__ (a * b)")
+        return self._mul(a, b)
+
+    def div(self, a, b):
+        """Deprecated: use ``//`` on :class:`repro.pum.PumArray`.
+        Unsigned floor division; lanes dividing by zero yield 0 (the
+        NumPy unsigned semantics, preserved bit-exactly when fused)."""
+        _warn_deprecated("div", "PumArray.__floordiv__ (a // b)")
+        return self._div(a, b)
+
+    def mod(self, a, b):
+        """Deprecated: use ``%`` on :class:`repro.pum.PumArray`.
+        Unsigned remainder, priced as one division (the restoring divider
+        computes the remainder alongside the quotient); lanes with a zero
+        divisor yield 0."""
+        _warn_deprecated("mod", "PumArray.__mod__ (a % b)")
+        return self._mod(a, b)
+
+    def divmod(self, a, b):
+        """Deprecated: use ``divmod()`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("divmod", "PumArray.__divmod__ (divmod(a, b))")
+        return self._divmod(a, b)
+
+    def less_than(self, a, b):
+        """Deprecated: use ``<`` on :class:`repro.pum.PumArray`."""
+        _warn_deprecated("less_than", "PumArray.__lt__ (a < b)")
+        return self._less_than(a, b)
+
+    def popcount(self, a, width: int | None = None):
+        """Deprecated: use :meth:`repro.pum.PumArray.popcount`."""
+        _warn_deprecated("popcount", "PumArray.popcount()")
+        return self._popcount(a, width)
+
+    def reduce_bits(self, a, kind: str, width: int | None = None):
+        """Deprecated: use :meth:`repro.pum.PumArray.reduce_bits`.
+        Per-element AND/OR/XOR reduction across the element's bits."""
+        _warn_deprecated("reduce_bits", "PumArray.reduce_bits(kind)")
+        return self._reduce_bits(a, kind, width)
+
+    def _alu_load2(self, a: np.ndarray, b: np.ndarray):
+        """Both operands into sim-ALU vertical registers (one row budget:
+        ``alu.words * 32`` lanes — callers guard the size)."""
+        alu = self._alu
+        return (alu.load(a.ravel()[: alu.words * 32]),
+                alu.load(b.ravel()[: alu.words * 32]))
+
+    def _alu_store(self, vec, like: np.ndarray) -> np.ndarray:
+        """Read a sim-ALU register back into ``like``'s size and shape."""
+        return self._alu.store(vec)[: like.size].reshape(like.shape)
+
     def _run2(self, name, a, b, np_fn):
-        if self.backend == "sim" and a.size <= self._alu.words * 32:
+        if self._alu is not None and a.size <= self._alu.words * 32:
             alu = self._alu
-            va, vb = alu.load(a.ravel()[: alu.words * 32]), None
-            vb = alu.load(b.ravel()[: alu.words * 32])
+            va, vb = self._alu_load2(a, b)
             fn = {"and": alu.and_, "or": alu.or_, "xor": alu.xor,
                   "add": alu.add, "sub": alu.sub, "mul": alu.mul}.get(name)
             if fn is None and name in ("div", "mod"):
+                # Zero-divisor lanes yield 0 on every backend (the ALU's
+                # restoring divider assumes b != 0 elementwise).
                 q, r = alu.div(va, vb)
-                out = alu.store(q if name == "div" else r)
+                out = self._alu_store(q if name == "div" else r, a)
+                out = np.where(b == 0, np.uint64(0), out)
+                vecs = (q, r, va, vb)
             else:
-                out = alu.store(fn(va, vb))
-            return out[: a.size].reshape(a.shape)
+                res = fn(va, vb)
+                out = self._alu_store(res, a)
+                vecs = (res, va, vb)
+            for v in vecs:  # return the subarray rows to the pool: the
+                alu.free(v)  # engine owns no Vec past the op
+            return out
         return np_fn(a, b)
 
     # ------------------------------------------------------------------ #

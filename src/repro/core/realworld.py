@@ -2,16 +2,19 @@
 
 Each kernel returns (result, pum_latency_ms, cpu_latency_ms): results are
 verified against direct NumPy in tests; the PuM latency comes from the
-engine's cost plane, the CPU number is the measured NumPy wall time on this
+device's cost plane, the CPU number is the measured NumPy wall time on this
 host (a *context* number — the paper measured a Skylake with AVX-512).
 
-Every kernel runs unchanged on an eager (``fuse=False``) or fused
-(``fuse=True``) engine and produces identical results and EngineStats: the
-packed-bitmap set intersections (BMI/TC/KCS) record through the engine's
-raw planewise path (64-bit words split into two 32-bit dataplane lanes),
-the arithmetic kernels (BW/KNN/IMS) through the value-mode fused ISA
-(now including ``mul``). The serving/benchmark stacks construct fused
-engines by default (fig20_realworld.py, examples/pum_database.py).
+Kernels consume the public :mod:`repro.pum` API: each takes a
+:class:`~repro.pum.Device` (a legacy ``PulsarEngine`` is coerced via
+``pum.as_device``) and computes through ``PumArray`` operators. Every
+kernel runs unchanged on an eager (``fuse=False``) or fused
+(``fuse=True``) device and produces identical results and EngineStats:
+the packed-bitmap set intersections (BMI/TC/KCS) route through the raw
+planewise path (64-bit words split into two 32-bit dataplane lanes), the
+arithmetic kernels (BW/KNN/IMS) through the value-mode fused ISA. The
+serving/benchmark stacks construct fused devices by default
+(fig20_realworld.py, examples/pum_database.py).
 
 Kernels (paper's nine, the bitwise-dominated seven implemented end-to-end;
 the two XNOR-CNNs are modeled at op-count level — their conv loops reduce to
@@ -31,7 +34,8 @@ import time
 
 import numpy as np
 
-from repro.core.engine import PulsarEngine, _vec_popcount
+from repro.core.engine import _vec_popcount
+from repro.pum import Device, as_device
 
 
 def _timed(fn):
@@ -40,10 +44,11 @@ def _timed(fn):
     return out, (time.perf_counter() - t0) * 1e3
 
 
-def bmi_active_users(engine: PulsarEngine, daily_bitmaps: np.ndarray
+def bmi_active_users(dev: Device, daily_bitmaps: np.ndarray
                      ) -> tuple[int, float, float]:
     """daily_bitmaps: [days, n_users/64] packed uint64. Query: how many users
     were active every day (Fig 20's BMI query)."""
+    dev = as_device(dev)
     days = daily_bitmaps.shape[0]
 
     def cpu():
@@ -53,39 +58,52 @@ def bmi_active_users(engine: PulsarEngine, daily_bitmaps: np.ndarray
         return int(_vec_popcount(acc).sum())
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
-    acc = daily_bitmaps[0]
+    dev.reset_stats()
+    acc = dev.asarray(daily_bitmaps[0])
     for d in range(1, days):
-        acc = engine.and_(acc, daily_bitmaps[d])
-    # Popcount over the 64-bit words' planes (bit-serial adder tree).
-    engine._charge("popcount", acc.size, n_planes=64)
-    got = int(_vec_popcount(acc).sum())
+        acc = acc & daily_bitmaps[d]
+    # Popcount over the 64-bit words' planes (bit-serial adder tree); the
+    # reduction itself reads back on the host, so only the charge is PuM.
+    dev.charge("popcount", acc.size, n_planes=64)
+    got = int(_vec_popcount(acc.to_numpy()).sum())
     assert got == want
-    return got, engine.latency_ms, cpu_ms
+    return got, dev.latency_ms, cpu_ms
 
 
-def bitweaving_scan(engine: PulsarEngine, column: np.ndarray, c1: int,
+def bitweaving_scan(dev: Device, column: np.ndarray, c1: int,
                     c2: int) -> tuple[int, float, float]:
     """select count(*) from T where c1 <= col <= c2 (BitWeaving [62])."""
+    dev = as_device(dev)
+
     def cpu():
         return int(((column >= c1) & (column <= c2)).sum())
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
-    ge = engine.less_than(np.full_like(column, c1 - 1), column)
-    le = engine.less_than(column, np.full_like(column, c2 + 1))
-    both = engine.and_(ge, le)
-    engine._charge("popcount", both.size, n_planes=1)
+    dev.reset_stats()
+    col = dev.asarray(column)
+    # Strict-compare sentinels (c1-1 < v < c2+1) with the trivially-true
+    # bounds short-circuited: c1 == 0 would underflow the lower sentinel
+    # to 2**64-1 and a c2 at the width max would overflow the upper one
+    # out of width — in both cases the predicate is always true and a
+    # real scan would skip the compare pass entirely.
+    ge = dev.asarray(np.ones_like(column)) if c1 <= 0 \
+        else np.full_like(column, c1 - 1) < col
+    le = dev.asarray(np.ones_like(column)) \
+        if c2 >= (1 << dev.width) - 1 \
+        else col < np.full_like(column, c2 + 1)
+    both = ge & le
+    dev.charge("popcount", both.size, n_planes=1)
     got = int(both.sum())
     assert got == want
-    return got, engine.latency_ms, cpu_ms
+    return got, dev.latency_ms, cpu_ms
 
 
-def triangle_count(engine: PulsarEngine, adj_bits: np.ndarray
+def triangle_count(dev: Device, adj_bits: np.ndarray
                    ) -> tuple[int, float, float]:
     """adj_bits: [n, n] {0,1} adjacency (undirected, no self-loops).
     Triangles = sum_{u<v, (u,v) in E} |N(u) & N(v)| / 3 via bitwise AND of
     packed adjacency rows (set-centric SISA style [10])."""
+    dev = as_device(dev)
     n = adj_bits.shape[0]
     packed = np.packbits(adj_bits, axis=1, bitorder="little")
     packed64 = np.zeros((n, (packed.shape[1] + 7) // 8 * 8), np.uint8)
@@ -101,23 +119,24 @@ def triangle_count(engine: PulsarEngine, adj_bits: np.ndarray
         return tot // 3
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
+    dev.reset_stats()
     tot = 0
     edges = [(u, v) for u in range(n) for v in range(u + 1, n)
              if adj_bits[u, v]]
     for u, v in edges:
-        inter = engine.and_(packed64[u], packed64[v])
-        engine._charge("popcount", inter.size, n_planes=64)
-        tot += int(_vec_popcount(inter).sum())
+        inter = dev.asarray(packed64[u]) & packed64[v]
+        dev.charge("popcount", inter.size, n_planes=64)
+        tot += int(_vec_popcount(inter.to_numpy()).sum())
     got = tot // 3
     assert got == want
-    return got, engine.latency_ms, cpu_ms
+    return got, dev.latency_ms, cpu_ms
 
 
-def kclique_star(engine: PulsarEngine, adj_bits: np.ndarray,
+def kclique_star(dev: Device, adj_bits: np.ndarray,
                  cliques: list[tuple[int, ...]]) -> tuple[int, float, float]:
     """Count vertices adjacent to every member of each k-clique (the star
     extension step of KCS [10]): AND-reduce clique members' adjacency rows."""
+    dev = as_device(dev)
     n = adj_bits.shape[0]
     packed = np.packbits(adj_bits, axis=1, bitorder="little")
     pad = np.zeros((n, (packed.shape[1] + 7) // 8 * 8), np.uint8)
@@ -134,24 +153,25 @@ def kclique_star(engine: PulsarEngine, adj_bits: np.ndarray,
         return tot
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
+    dev.reset_stats()
     tot = 0
     for cl in cliques:
-        acc = rows[cl[0]]
+        acc = dev.asarray(rows[cl[0]])
         for v in cl[1:]:
-            acc = engine.and_(acc, rows[v])
-        engine._charge("popcount", acc.size, n_planes=64)
-        tot += int(_vec_popcount(acc).sum())
+            acc = acc & rows[v]
+        dev.charge("popcount", acc.size, n_planes=64)
+        tot += int(_vec_popcount(acc.to_numpy()).sum())
     got = tot
     assert got == want
-    return got, engine.latency_ms, cpu_ms
+    return got, dev.latency_ms, cpu_ms
 
 
-def knn_distances(engine: PulsarEngine, queries: np.ndarray,
+def knn_distances(dev: Device, queries: np.ndarray,
                   refs: np.ndarray) -> tuple[np.ndarray, float, float]:
     """Quantized (8-bit) squared-L2 distances, kNN front half: for each query
     compute distances to all refs; argmin on host (as in the paper, the
     host reads back and selects)."""
+    dev = as_device(dev)
     q = queries.astype(np.int64)
     r = refs.astype(np.int64)
 
@@ -159,58 +179,61 @@ def knn_distances(engine: PulsarEngine, queries: np.ndarray,
         return (((q[:, None, :] - r[None, :, :]) ** 2).sum(-1)).argmin(1)
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
+    dev.reset_stats()
     n_q, n_r, f = q.shape[0], r.shape[0], r.shape[1]
     dists = np.zeros((n_q, n_r), np.uint64)
     for j in range(f):
         a = np.repeat(q[:, j], n_r)
         b = np.tile(r[:, j], n_q)
-        d = engine.sub(a.astype(np.uint64), b.astype(np.uint64))
+        d = dev.asarray(a.astype(np.uint64)) - b.astype(np.uint64)
         # |a-b|^2 == ((a-b) mod 2^w)^2 mod 2^w needs sign handling; engine
         # works mod 2^width — use the identity (a-b)^2 = (b-a)^2 and mask.
-        d2 = engine.mul(d, d)
+        d2 = d * d
         dists += d2.reshape(n_q, n_r)
     got = dists.argmin(1)
     np.testing.assert_array_equal(got, want)
-    return got, engine.latency_ms, cpu_ms
+    return got, dev.latency_ms, cpu_ms
 
 
-def image_segmentation(engine: PulsarEngine, img: np.ndarray,
+def image_segmentation(dev: Device, img: np.ndarray,
                        colors: np.ndarray) -> tuple[np.ndarray, float, float]:
     """Assign each pixel the nearest of C colors (1-D intensity model,
     per-pixel |p - c| compare network), PuM-side compares + mux."""
+    dev = as_device(dev)
     p = img.ravel().astype(np.int64)
 
     def cpu():
         return np.abs(p[:, None] - colors[None, :].astype(np.int64)).argmin(1)
 
     want, cpu_ms = _timed(cpu)
-    engine.reset_stats()
+    dev.reset_stats()
     # Width-max sentinel (not uint64-max): distances are in-width values,
-    # so the compare network works identically on eager and fused engines.
-    best = np.full(p.shape, (1 << engine.width) - 1, np.uint64)
+    # so the compare network works identically on eager and fused devices.
+    best = np.full(p.shape, (1 << dev.width) - 1, np.uint64)
     label = np.zeros(p.shape, np.uint64)
+    pix = dev.asarray(p.astype(np.uint64))
     for ci, c in enumerate(colors):
-        d1 = engine.sub(p.astype(np.uint64), np.full_like(best, c))
-        d2 = engine.sub(np.full_like(best, c), p.astype(np.uint64))
-        mask_neg = engine.less_than(np.full_like(best, int(c)),
-                                    p.astype(np.uint64))
-        d = np.where(mask_neg.astype(bool), d1, d2)
-        better = engine.less_than(d, best)
+        cvec = np.full_like(best, c)
+        d1 = pix - cvec
+        d2 = dev.asarray(cvec) - pix
+        mask_neg = dev.asarray(np.full_like(best, int(c))) < pix
+        d = np.where(mask_neg.astype(bool), np.asarray(d1), np.asarray(d2))
+        better = dev.asarray(d) < best
         best = np.where(better.astype(bool), d, best)
         label = np.where(better.astype(bool), ci, label)
     np.testing.assert_array_equal(label, want)
-    return label, engine.latency_ms, cpu_ms
+    return label, dev.latency_ms, cpu_ms
 
 
-def xnor_conv_cost(engine: PulsarEngine, in_ch: int, out_ch: int,
+def xnor_conv_cost(dev: Device, in_ch: int, out_ch: int,
                    kh: int, kw: int, oh: int, ow: int) -> float:
     """Op-count latency model of one binarized conv layer (XNOR-Net [92]):
     per output: XNOR over in_ch*kh*kw bits + popcount + sign. Returns ms."""
-    engine.reset_stats()
+    dev = as_device(dev)
+    dev.reset_stats()
     n_out = out_ch * oh * ow
     bits = in_ch * kh * kw
-    engine._charge("xor2", n_out)                   # fused XNOR plane op
-    engine._charge("popcount", n_out, n_planes=min(bits, 64))
-    engine._charge("compare", n_out, width=16)
-    return engine.latency_ms
+    dev.charge("xor2", n_out)                   # fused XNOR plane op
+    dev.charge("popcount", n_out, n_planes=min(bits, 64))
+    dev.charge("compare", n_out, width=16)
+    return dev.latency_ms

@@ -42,6 +42,20 @@ less (unsigned compare -> 0/1), popcount (adder tree over the element's
 planes), reduce_and(param=w) (== mask(w)), reduce_or (!= 0), reduce_xor
 (parity).
 
+Tuple op: ``divmod`` runs the restoring divider ONCE and yields the
+(quotient, remainder) *pair*; the selector ops ``fst``/``snd`` extract the
+components. A tuple value must be consumed through selectors — it can
+never itself be a program output. The engine lowers ``div``/``mod``/
+``divmod`` through this form, so ``a // b`` and ``a % b`` of the same
+operands CSE into one divider pass at flush (the standalone ``div``/
+``mod`` opcodes remain valid IR for directly-authored programs).
+
+Backend selection goes through the registry in :mod:`repro.backends`
+(capability ``"fused"``): on TPU the ``pallas-tpu`` evaluator wins by
+priority, elsewhere ``words-cpu``; ``ref-vertical`` is requestable by
+name for validation. A new evaluator (e.g. width-64 planes) is an
+additive ``register_backend`` call.
+
 Before compilation the engine normalizes each recorded graph with
 ``optimize_program`` (common-subexpression elimination + dead-node/leaf
 pruning). The optimizer is a pure function of graph structure, so the
@@ -53,11 +67,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.backends import get_backend, on_tpu as _on_tpu, select_backend
 from repro.kernels import ref
 from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
 
@@ -65,8 +81,9 @@ LANE = 128
 SUBLANE = 8
 BLOCK_WORDS = SUBLANE * LANE  # one (8, 128) int32 tile per grid step
 
-OPCODES = ("and", "or", "xor", "add", "sub", "mul", "div", "mod", "less",
-           "popcount", "reduce_and", "reduce_or", "reduce_xor")
+OPCODES = ("and", "or", "xor", "add", "sub", "mul", "div", "mod", "divmod",
+           "fst", "snd", "less", "popcount", "reduce_and", "reduce_or",
+           "reduce_xor")
 
 # Opcodes whose operand order does not matter: CSE canonicalizes their
 # argument tuples by sorting so `add(a, b)` and `add(b, a)` unify.
@@ -203,6 +220,12 @@ def _apply_op(op: FusedOp, xs: list, width: int, zero):
     if op.opcode in ("div", "mod"):
         q, r = ref.plane_divmod(xs[0], xs[1])
         return q if op.opcode == "div" else r
+    if op.opcode == "divmod":
+        return ref.plane_divmod(xs[0], xs[1])  # tuple value: one divider
+    if op.opcode == "fst":
+        return xs[0][0]
+    if op.opcode == "snd":
+        return xs[0][1]
     if op.opcode == "less":
         return scalar(ref.plane_sub(xs[0], xs[1])[1])
     if op.opcode == "popcount":
@@ -265,12 +288,20 @@ def _apply_word_op(op: FusedOp, xs: list, width: int,
         return (xs[0] - xs[1]) & mask
     if op.opcode == "mul":
         return (xs[0] * xs[1]) & mask
-    if op.opcode in ("div", "mod"):
+    if op.opcode in ("div", "mod", "divmod"):
         # Unsigned NumPy semantics: x // 0 == x % 0 == 0 per lane.
         zero_div = xs[1] == 0
         safe = jnp.where(zero_div, jnp.uint32(1), xs[1])
+        zero = jnp.uint32(0)
+        if op.opcode == "divmod":  # tuple value, consumed by fst/snd
+            return (jnp.where(zero_div, zero, xs[0] // safe),
+                    jnp.where(zero_div, zero, xs[0] % safe))
         out = xs[0] // safe if op.opcode == "div" else xs[0] % safe
-        return jnp.where(zero_div, jnp.uint32(0), out)
+        return jnp.where(zero_div, zero, out)
+    if op.opcode == "fst":
+        return xs[0][0]
+    if op.opcode == "snd":
+        return xs[0][1]
     if op.opcode == "less":
         return (xs[0] < xs[1]).astype(jnp.uint32)
     if op.opcode == "popcount":
@@ -341,49 +372,92 @@ def run_program_pallas(program: FusedProgram, x: jax.Array,
 
 
 # --------------------------------------------------------------------- #
-# End-to-end pipeline: pack -> run -> unpack, one jit trace, cached
+# End-to-end pipeline: pack -> run -> unpack, one jit trace, cached.
+# Evaluator chosen by capability lookup in the repro.backends registry.
 # --------------------------------------------------------------------- #
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def get_pipeline(program: FusedProgram, force_pallas: bool = False,
-                 interpret: bool = False, force_vertical: bool = False):
+                 interpret: bool = False, force_vertical: bool = False,
+                 donate: bool = False, backend: str | None = None):
     """Compiled callable for ``program``: ``fn(*leaves) -> tuple(outs)``.
 
     Leaves are flat [n] int32 arrays of packed horizontal words (element i
     = word i), n a multiple of 32; outputs likewise. One jit trace end to
-    end. On TPU (or ``force_pallas``) operands bit-transpose to vertical
-    layout once, the Pallas program runs fused, outputs transpose back
-    once; on CPU the word-domain evaluator runs (``force_vertical`` keeps
-    the transpose+planes form for validation). Cached on (program
-    structure, backend); jit handles per-shape specialization.
+    end. The evaluator is resolved through the backend registry
+    (``repro.backends``, capability ``"fused"``): on TPU the Pallas
+    vertical evaluator wins (operands bit-transpose once, the fused
+    program runs per VMEM block, outputs transpose back once); elsewhere
+    the word-domain evaluator runs. ``backend=`` names a registered
+    evaluator explicitly; ``force_pallas``/``force_vertical`` are
+    shorthands for the built-in names. With ``donate=True`` the leaf
+    device buffers are donated to the trace (``donate_argnums``) so XLA
+    may reuse them for intermediates — the engine's leaf snapshots stay on
+    the host, so donation never invalidates caller-visible data. Cached
+    on (program structure, backend, donate); jit handles per-shape
+    specialization.
     """
-    return _cached_pipeline(program, force_pallas or _on_tpu(), interpret,
-                            force_vertical)
+    if backend is None:
+        if force_pallas:
+            backend = "pallas-tpu"
+        elif force_vertical:
+            backend = "ref-vertical"
+        else:
+            backend = select_backend(require="fused",
+                                     width=program.width).name
+    # Cache on the resolved BackendSpec, not the name: re-registering a
+    # name creates a new (frozen, hashable) spec, so stale pipelines
+    # compiled by a replaced builder can never be served.
+    return _cached_pipeline(program, get_backend(backend), interpret,
+                            donate)
 
 
 @functools.lru_cache(maxsize=256)  # bounded: one jit callable per structure
-def _cached_pipeline(program: FusedProgram, use_pallas: bool,
-                     interpret: bool, force_vertical: bool):
-    return _build_pipeline(program, use_pallas, interpret, force_vertical)
+def _cached_pipeline(program: FusedProgram, spec, interpret: bool,
+                     donate: bool):
+    return spec.builder(program, interpret=interpret, donate=donate)
 
 
-def _build_pipeline(program: FusedProgram, use_pallas: bool,
-                    interpret: bool, force_vertical: bool):
+def _donating(fn, n_leaves: int):
+    """Wrap a jit'd pipeline so its leaf buffers are donated: operands are
+    committed to the device first (donating raw NumPy args would fall back
+    to a copy with a warning), then handed over for XLA to reuse. Donation
+    is opportunistic — a program usually has fewer outputs than leaves, so
+    some donated buffers go unused; jax's warning about those is expected
+    and silenced."""
+    jitted = jax.jit(fn, donate_argnums=tuple(range(n_leaves)))
+
+    def call(*leaves):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            return jitted(*(jnp.asarray(x) for x in leaves))
+
+    return call
+
+
+def build_words_pipeline(program: FusedProgram, donate: bool = False):
+    """Word-domain pipeline (the CPU execution path): the bracketing
+    bit_transpose32 pair cancels algebraically, so the program fuses
+    directly on horizontal words."""
+    def word_pipeline(*leaves):
+        outs = run_program_words(
+            program,
+            [jax.lax.bitcast_convert_type(x, jnp.uint32)
+             for x in leaves])
+        return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
+                     for o in outs)
+
+    if donate:
+        return _donating(word_pipeline, program.n_inputs)
+    return jax.jit(word_pipeline)
+
+
+def build_vertical_pipeline(program: FusedProgram, use_pallas: bool,
+                            interpret: bool = False, donate: bool = False):
+    """Vertical bit-plane pipeline: transpose in once, run the fused
+    program (Pallas kernel or jnp oracle), transpose out once."""
     width = program.width
-    if not use_pallas and not force_vertical:
-        @jax.jit
-        def word_pipeline(*leaves):
-            outs = run_program_words(
-                program,
-                [jax.lax.bitcast_convert_type(x, jnp.uint32)
-                 for x in leaves])
-            return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
-                         for o in outs)
-        return word_pipeline
-
     if use_pallas:
         interp = interpret or not _on_tpu()
         transpose = functools.partial(_pl_transpose, interpret=interp)
@@ -404,10 +478,11 @@ def _build_pipeline(program: FusedProgram, use_pallas: bool,
                 [planes, jnp.zeros((32 - width, g), planes.dtype)])
         return transpose(planes).T.reshape(32 * g)
 
-    @jax.jit
     def pipeline(*leaves):
         stack = jnp.stack([pack(leaf) for leaf in leaves])
         outs = run(stack)
         return tuple(unpack(outs[t]) for t in range(outs.shape[0]))
 
-    return pipeline
+    if donate:
+        return _donating(pipeline, program.n_inputs)
+    return jax.jit(pipeline)

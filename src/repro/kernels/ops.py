@@ -15,8 +15,7 @@ values are unsigned modulo 2**width.
 
 from __future__ import annotations
 
-import jax
-
+from repro.backends import on_tpu as _on_tpu
 from repro.kernels import ref
 from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
 from repro.kernels.bitserial_add import bitserial_add as _pl_add
@@ -24,10 +23,6 @@ from repro.kernels.charge_share import charge_share as _pl_cs
 from repro.kernels.fused_program import (FusedProgram, run_program_pallas,
                                          run_program_ref)
 from repro.kernels.maj_n import maj_n as _pl_maj
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def maj_n(x, threshold: int, force_pallas: bool = False,

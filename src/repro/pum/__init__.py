@@ -1,0 +1,45 @@
+"""repro.pum — the public API of the PULSAR PuM compute stack.
+
+Everything an application needs is here; nothing else in the repo is a
+stable surface (``PulsarEngine``'s op methods survive only as a
+deprecated compat shim). Three pieces:
+
+* :class:`PumArray` — ndarray-like handle with operator overloading
+  (``& | ^ + - * // % < > <= >=``, ``divmod()``, ``popcount()``,
+  ``reduce_bits()``) unifying eager results, fused lazy handles and raw
+  packed-bitmap words behind one type;
+* :class:`Device` + :class:`EngineConfig` — configuration and lifecycle
+  (``pum.device(...)`` as a context manager scopes the default device
+  for ``pum.asarray`` and auto-flushes on exit);
+* the backend registry (:func:`register_backend` and friends) — the
+  sim-chip, word-domain-CPU and Pallas-TPU evaluators are selected by
+  capability lookup; new backends register additively.
+
+See ``docs/api.md`` for the full surface, the Device lifecycle, the
+backend registry contract, and the old-call -> new-call migration table.
+"""
+
+from repro.backends import (BackendSpec, available_backends, get_backend,
+                            register_backend, select_backend,
+                            unregister_backend)
+from repro.core.engine import EngineStats
+from repro.pum.api import (Device, PumArray, as_device, asarray,
+                           default_device, device)
+from repro.pum.config import EngineConfig
+
+__all__ = [
+    "BackendSpec",
+    "Device",
+    "EngineConfig",
+    "EngineStats",
+    "PumArray",
+    "as_device",
+    "asarray",
+    "available_backends",
+    "default_device",
+    "device",
+    "get_backend",
+    "register_backend",
+    "select_backend",
+    "unregister_backend",
+]

@@ -1,0 +1,413 @@
+"""PumArray + Device: the ndarray-like operator frontend over the engine.
+
+``PumArray`` is the one caller-visible value type: it wraps whichever
+representation the engine produced (an eager ndarray, a pending
+``LazyArray`` of the fused graph, or raw packed-bitmap words) behind
+operator overloading, and materializes on demand (``to_numpy()`` /
+``np.asarray``). ``Device`` owns the engine an array computes on; used as
+a context manager it scopes the default device for :func:`asarray` and
+auto-flushes pending work on exit.
+
+>>> import numpy as np
+>>> import repro.pum as pum
+>>> with pum.device(width=8) as dev:
+...     x = dev.asarray(np.array([3, 5, 250], np.uint64))
+...     y = (x + 6) * x                  # records into the fused graph
+>>> y.to_numpy()                         # flushed on scope exit
+array([27, 55,  0], dtype=uint64)
+>>> q, r = divmod(y, np.array([4, 7, 9], np.uint64))
+>>> np.asarray(q), np.asarray(r)         # one restoring-division pass
+(array([6, 7, 0], dtype=uint64), array([3, 6, 0], dtype=uint64))
+
+Plane-wise operators (``&``/``|``/``^``) on out-of-width operands route
+through the engine's raw packed-bitmap path (bit-exact on full uint64
+words); arithmetic computes modulo ``2**width`` and rejects out-of-width
+operands loudly in fused mode — exactly the :class:`PulsarEngine`
+contract, now behind one type.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.pum.config import EngineConfig
+
+# Innermost active `with device(...)` last; module default built lazily.
+_ACTIVE: list["Device"] = []
+_DEFAULT: "Device | None" = None
+
+
+class Device:
+    """One PuM compute device: an engine plus its configuration.
+
+    Construction goes through :class:`EngineConfig` (keyword overrides
+    accepted); the eager dataplane and fused evaluators are resolved via
+    the ``repro.backends`` registry. As a context manager the device
+    becomes the scoped default for :func:`asarray` and flushes any
+    pending fused graph on exit.
+    """
+
+    def __init__(self, config: EngineConfig | None = None, *,
+                 _engine=None, **overrides):
+        if config is None:
+            config = EngineConfig(**overrides)
+        elif overrides:
+            config = config.replace(**overrides)
+        # The sim backend is per-op by construction (the chip model has no
+        # word dataplane to fuse over).
+        if config.backend == "sim" and config.fuse:
+            config = config.replace(fuse=False)
+        # Likewise when no registered fused evaluator covers this width
+        # (the fused leaf packing is 32-bit): fall back to per-op eager
+        # execution instead of refusing to build — EngineConfig-valid
+        # widths up to 64 always yield a working device.
+        if config.fuse:
+            from repro.backends import select_backend
+            try:
+                select_backend(require="fused", width=config.width)
+            except LookupError:
+                config = config.replace(fuse=False)
+        self.config = config
+        if _engine is None:
+            from repro.core.engine import PulsarEngine
+            _engine = PulsarEngine(
+                mfr=config.mfr, width=config.width,
+                row_bits=config.row_bits, banks=config.banks,
+                backend=config.backend, success_db=config.success_db,
+                use_pulsar=config.use_pulsar, chained=config.chained,
+                controller=config.controller, seed=config.seed,
+                fuse=config.fuse, flush_threshold=config.flush_threshold,
+                flush_memory_bytes=config.flush_memory_bytes,
+                donate_leaves=config.donate_leaves)
+        self.engine = _engine
+        self._scalars: dict[tuple, np.ndarray] = {}
+
+    # -- array construction / lifecycle -------------------------------- #
+
+    def asarray(self, x) -> "PumArray":
+        """Wrap ``x`` as a :class:`PumArray` on this device (no compute,
+        no charge — arrays enter the dataplane when an op consumes them).
+        """
+        if isinstance(x, PumArray):
+            return x if x.device is self else PumArray(self, x.to_numpy())
+        return PumArray(self, np.asarray(x, np.uint64))
+
+    def flush(self) -> None:
+        """Materialize the pending fused op graph (no-op when eager or
+        empty; never touches the cost plane)."""
+        self.engine.flush()
+
+    def __enter__(self) -> "Device":
+        _ACTIVE.append(self)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        _ACTIVE.remove(self)
+        if exc_type is None:
+            self.flush()
+
+    # -- cost plane ----------------------------------------------------- #
+
+    @property
+    def stats(self):
+        """Accumulated :class:`~repro.core.engine.EngineStats` charges."""
+        return self.engine.stats
+
+    def reset_stats(self) -> None:
+        self.engine.reset_stats()
+
+    @property
+    def latency_ms(self) -> float:
+        return self.engine.latency_ms
+
+    @property
+    def width(self) -> int:
+        return self.engine.width
+
+    def charge(self, kind: str, n_elems: int, width: int | None = None,
+               n_planes: int | None = None) -> None:
+        """Charge the cost plane for work the host performs on the PuM
+        array's behalf (e.g. a popcount over raw 64-bit bitmap words that
+        the dataplane computes host-side). Dataplane ops charge
+        themselves — this is for explicitly modeled extra passes."""
+        self.engine._charge(kind, n_elems, width=width, n_planes=n_planes)
+
+    # -- op dispatch (PumArray operators land here) --------------------- #
+
+    def _op(self, name: str, *operands):
+        return getattr(self.engine, "_" + name)(*operands)
+
+    def _broadcast_scalar(self, value, shape: tuple) -> np.ndarray:
+        """One shared array per (scalar, shape): handing the engine the
+        SAME object on every use lets the fused graph's id()-keyed leaf
+        dedup hit, instead of snapshotting a fresh full-size leaf per op.
+        Entries are O(1) read-only broadcast views (the engine copies at
+        snapshot time anyway), so the bounded cache stays tiny."""
+        key = (int(value), shape)
+        arr = self._scalars.get(key)
+        if arr is None:
+            if len(self._scalars) >= 64:
+                self._scalars.clear()
+            arr = np.broadcast_to(np.uint64(value), shape)
+            self._scalars[key] = arr
+        return arr
+
+    def __repr__(self) -> str:
+        c = self.config
+        mode = "fused" if c.fuse else "eager"
+        return (f"Device({c.mfr}:{c.width}w:{c.banks}b, "
+                f"backend={c.backend!r}, {mode})")
+
+
+class PumArray:
+    """ndarray-like handle for a value on a PuM device.
+
+    Wraps eager ndarrays and pending fused-graph handles behind one type;
+    operators record/execute through the owning device's engine and
+    charge the cost plane exactly like the engine methods they replace.
+    ``to_numpy()`` / ``np.asarray`` materialize (flushing the fused graph
+    if pending); ``sum``/``reshape``/``astype`` materialize and return
+    plain ndarrays.
+    """
+
+    __slots__ = ("_device", "_data")
+    # Keep NumPy from consuming us element-wise: binary ops with ndarrays
+    # return NotImplemented on the ndarray side and come back through our
+    # reflected methods.
+    __array_ufunc__ = None
+    __array_priority__ = 1000
+
+    def __init__(self, device: Device, data):
+        self._device = device
+        self._data = data
+
+    # -- introspection -------------------------------------------------- #
+
+    @property
+    def device(self) -> Device:
+        return self._device
+
+    @property
+    def shape(self) -> tuple:
+        return self._data.shape
+
+    @property
+    def size(self) -> int:
+        return self._data.size
+
+    @property
+    def ndim(self) -> int:
+        return self._data.ndim
+
+    @property
+    def dtype(self):
+        return np.dtype(np.uint64)
+
+    def __len__(self) -> int:
+        if not self.shape:
+            raise TypeError("len() of unsized PumArray")
+        return self.shape[0]
+
+    def __repr__(self) -> str:
+        pending = getattr(self._data, "_value", self._data) is None
+        state = "pending" if pending else "materialized"
+        return f"PumArray(shape={self.shape}, {state}, on {self._device})"
+
+    # -- materialization ------------------------------------------------ #
+
+    def to_numpy(self) -> np.ndarray:
+        """The value as a uint64 ndarray (flushes the fused graph if this
+        handle is pending)."""
+        return np.asarray(self._data, np.uint64)
+
+    def __array__(self, dtype=None, copy=None):
+        v = self.to_numpy()
+        return v.astype(dtype) if dtype is not None else v
+
+    def sum(self, *args, **kw):
+        return self.to_numpy().sum(*args, **kw)
+
+    def reshape(self, *shape, **kw) -> np.ndarray:
+        return self.to_numpy().reshape(*shape, **kw)
+
+    def astype(self, dtype, **kw) -> np.ndarray:
+        return self.to_numpy().astype(dtype, **kw)
+
+    # -- operator frontend ---------------------------------------------- #
+
+    def _operand(self, other):
+        """Unwrap/conform the second operand: same-device PumArrays pass
+        their underlying handle through (extending the fused graph);
+        foreign-device arrays materialize; scalars broadcast to this
+        array's shape so the op stays fusable."""
+        if isinstance(other, PumArray):
+            return other._data if other._device is self._device \
+                else other.to_numpy()
+        arr = np.asarray(other, np.uint64)
+        if arr.ndim == 0 and self.shape:
+            arr = self._device._broadcast_scalar(arr[()], self.shape)
+        return arr
+
+    def _binop(self, name: str, other, reflect: bool = False):
+        a, b = self._data, self._operand(other)
+        if reflect:
+            a, b = b, a
+        return PumArray(self._device, self._device._op(name, a, b))
+
+    def __and__(self, other):
+        return self._binop("and", other)
+
+    def __rand__(self, other):
+        return self._binop("and", other, reflect=True)
+
+    def __or__(self, other):
+        return self._binop("or", other)
+
+    def __ror__(self, other):
+        return self._binop("or", other, reflect=True)
+
+    def __xor__(self, other):
+        return self._binop("xor", other)
+
+    def __rxor__(self, other):
+        return self._binop("xor", other, reflect=True)
+
+    def __add__(self, other):
+        return self._binop("add", other)
+
+    def __radd__(self, other):
+        return self._binop("add", other, reflect=True)
+
+    def __sub__(self, other):
+        return self._binop("sub", other)
+
+    def __rsub__(self, other):
+        return self._binop("sub", other, reflect=True)
+
+    def __mul__(self, other):
+        return self._binop("mul", other)
+
+    def __rmul__(self, other):
+        return self._binop("mul", other, reflect=True)
+
+    def __floordiv__(self, other):
+        return self._binop("div", other)
+
+    def __rfloordiv__(self, other):
+        return self._binop("div", other, reflect=True)
+
+    def __mod__(self, other):
+        return self._binop("mod", other)
+
+    def __rmod__(self, other):
+        return self._binop("mod", other, reflect=True)
+
+    def __divmod__(self, other):
+        """(quotient, remainder) sharing ONE restoring-division pass (the
+        fused-ISA ``divmod`` tuple op; one cost-plane division charge)."""
+        q, r = self._device._op("divmod", self._data,
+                                self._operand(other))
+        return PumArray(self._device, q), PumArray(self._device, r)
+
+    def __rdivmod__(self, other):
+        q, r = self._device._op("divmod", self._operand(other),
+                                self._data)
+        return PumArray(self._device, q), PumArray(self._device, r)
+
+    def __lt__(self, other):
+        """Unsigned ``self < other`` per lane -> 0/1 PumArray."""
+        return self._binop("less_than", other)
+
+    def __gt__(self, other):
+        return self._binop("less_than", other, reflect=True)
+
+    def _not(self, bit: "PumArray") -> "PumArray":
+        ones = self._device._broadcast_scalar(1, bit.shape)
+        return PumArray(self._device,
+                        self._device._op("xor", bit._data, ones))
+
+    def __le__(self, other):
+        """``self <= other`` == NOT(other < self): one compare + one
+        plane XOR (both charged — that is what the DRAM would run)."""
+        return self._not(self.__gt__(other))
+
+    def __ge__(self, other):
+        return self._not(self.__lt__(other))
+
+    def popcount(self, width: int | None = None) -> "PumArray":
+        """Per-element set-bit count over ``width`` planes (device width
+        by default)."""
+        return PumArray(self._device,
+                        self._device._op("popcount", self._data, width))
+
+    def reduce_bits(self, kind: str, width: int | None = None
+                    ) -> "PumArray":
+        """Per-element AND/OR/XOR reduction across the element's bits."""
+        return PumArray(self._device,
+                        self._device._op("reduce_bits", self._data, kind,
+                                         width))
+
+    # -- ndarray comparison/truth semantics (values, not identity) ------ #
+
+    def __eq__(self, other):
+        return self.to_numpy() == np.asarray(other)
+
+    def __ne__(self, other):
+        return self.to_numpy() != np.asarray(other)
+
+    __hash__ = None  # unhashable, like ndarray
+
+    def __bool__(self):
+        return bool(self.to_numpy())
+
+
+# --------------------------------------------------------------------- #
+# Module-level device scoping
+# --------------------------------------------------------------------- #
+
+
+def device(config: EngineConfig | None = None, **overrides) -> Device:
+    """Build a :class:`Device` from an :class:`EngineConfig` (or keyword
+    overrides of the defaults). Use as a context manager to scope it as
+    the default device and auto-flush on exit::
+
+        with pum.device(mfr="M", width=32, controller="auto") as dev:
+            y = dev.asarray(x) + x2
+    """
+    return Device(config, **overrides)
+
+
+def default_device() -> Device:
+    """The innermost active ``with device(...)`` scope, else a process-wide
+    default ``Device(EngineConfig())`` built on first use."""
+    global _DEFAULT
+    if _ACTIVE:
+        return _ACTIVE[-1]
+    if _DEFAULT is None:
+        _DEFAULT = Device(EngineConfig())
+    return _DEFAULT
+
+
+def asarray(x, device: Device | None = None) -> PumArray:
+    """Wrap ``x`` as a :class:`PumArray` on ``device`` (default: the
+    scoped/default device)."""
+    return (device or default_device()).asarray(x)
+
+
+def as_device(obj) -> Device:
+    """Coerce to a :class:`Device`: passes Devices through and wraps an
+    existing ``PulsarEngine`` (compat for call sites that still construct
+    engines directly)."""
+    if isinstance(obj, Device):
+        return obj
+    from repro.core.engine import PulsarEngine
+    if isinstance(obj, PulsarEngine):
+        cfg = EngineConfig(
+            mfr=obj.mfr, width=obj.width, row_bits=obj.row_bits,
+            banks=obj.banks, backend=obj.backend, use_pulsar=obj.use_pulsar,
+            chained=obj.chained, controller=obj.controller, seed=obj.seed,
+            fuse=obj.fuse, flush_threshold=obj.flush_threshold,
+            flush_memory_bytes=obj.flush_memory_bytes,
+            donate_leaves=obj.donate_leaves, success_db=obj.db)
+        return Device(cfg, _engine=obj)
+    raise TypeError(f"cannot interpret {type(obj).__name__} as a Device")

@@ -1,0 +1,65 @@
+"""EngineConfig — the frozen configuration object behind ``pum.device``.
+
+One immutable dataclass replaces ``PulsarEngine``'s keyword sprawl: every
+knob a device needs is named, validated once, and carried by the
+:class:`~repro.pum.Device` that owns the engine. ``dataclasses.replace``
+derives variants (the idiom the benchmarks use for PULSAR-vs-FracDRAM
+pairs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Complete configuration of one PuM device.
+
+    Fields mirror the modeled hardware (``mfr``/``width``/``row_bits``/
+    ``banks``), the cost plane (``use_pulsar``/``chained``/``controller``)
+    and the execution pipeline (``backend``/``fuse``/auto-flush bounds/
+    ``donate_leaves``). Unlike the legacy engine constructor, ``fuse``
+    defaults to **True**: the fused lazy pipeline is the production path
+    (bit-exact and stats-identical to eager — set ``fuse=False`` to force
+    per-op eager execution).
+
+    * ``backend`` — eager-dataplane name resolved through the
+      ``repro.backends`` registry: ``"fast"`` (packed NumPy words) or
+      ``"sim"`` (bit-exact chip model; implies ``fuse=False``), or any
+      registered name with the ``"eager"`` capability.
+    * ``controller`` — ``None`` (closed-form bank divide), ``"auto"``
+      (build a ``MemoryController``), or a controller instance.
+    * ``donate_leaves`` — donate leaf device buffers to the fused trace
+      (``jax.jit(..., donate_argnums=...)``): XLA may reuse them for
+      intermediates, cutting pipeline peak memory. Results are
+      bit-identical either way.
+    * ``success_db`` — optional ``SuccessRateDb`` override for the
+      characterization data (tests/sensitivity sweeps).
+    """
+
+    mfr: str = "M"
+    width: int = 32
+    row_bits: int = 65536
+    banks: int = 16
+    backend: str = "fast"
+    use_pulsar: bool = True
+    chained: bool = False
+    controller: Any = None
+    seed: int = 0
+    fuse: bool = True
+    flush_threshold: int | None = 1024
+    flush_memory_bytes: int | None = 1 << 30
+    donate_leaves: bool = False
+    success_db: Any = None
+
+    def __post_init__(self):
+        if not 1 <= self.width <= 64:
+            raise ValueError(f"width must be in [1, 64], got {self.width}")
+        if self.flush_threshold is not None and self.flush_threshold < 1:
+            raise ValueError("flush_threshold must be >= 1 or None")
+
+    def replace(self, **changes) -> "EngineConfig":
+        """A copy with ``changes`` applied (``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)

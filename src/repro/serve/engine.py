@@ -9,11 +9,11 @@ the same ones the dry-run lowers for the 256/512-chip meshes.)
 Bulk slot bookkeeping routes through the PuM dataplane by default
 (``pum_bulk=True``): the per-tick stop predicate — EOS match, generated
 length cap, context-length cap, across all active slots — is one fused
-``PulsarEngine`` program (xor/reduce_or equality + less_than compares)
-instead of a per-slot Python conditional. Results are bit-identical to the
-host path (tested); the engine's cost plane (``ServeEngine.pum.stats``)
-prices what that bookkeeping would cost executed in DRAM. ``pum_bulk=
-False`` restores the pure-host loop.
+PuM program (xor/reduce_or equality + less-than compares) recorded
+through ``repro.pum`` operators instead of a per-slot Python conditional.
+Results are bit-identical to the host path (tested); the device's cost
+plane (``ServeEngine.pum.stats``) prices what that bookkeeping would cost
+executed in DRAM. ``pum_bulk=False`` restores the pure-host loop.
 """
 
 from __future__ import annotations
@@ -26,8 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.pum as pum
 from repro.config.base import ModelConfig
-from repro.core.engine import PulsarEngine
 from repro.models.model import decode_step, init_cache, init_params, prefill
 
 
@@ -48,9 +48,9 @@ class ServeEngine:
                  max_len: int = 256, eos_id: int = 1, seed: int = 0,
                  greedy: bool = True, pum_bulk: bool = True):
         self.cfg = cfg
-        # Fused PuM engine for bulk slot bookkeeping (stop masks): ops
+        # Fused PuM device for bulk slot bookkeeping (stop masks): ops
         # record lazily and each tick's predicate compiles to one program.
-        self.pum = PulsarEngine(width=32, fuse=True) if pum_bulk else None
+        self.pum = pum.device(width=32, fuse=True) if pum_bulk else None
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed))
         self.max_batch = max_batch
@@ -119,14 +119,14 @@ class ServeEngine:
     def _stop_mask_pum(self, active: list[int]) -> list[bool]:
         """Bulk stop predicate on the fused PuM engine: per active slot,
         ``tok == eos or n_generated >= max_new or pos >= max_len-1``. The
-        recorded ops (xor + reduce_or equality, less_than length caps)
+        recorded ops (``^`` + ``reduce_or`` equality, ``<`` length caps)
         compile into one fused program on materialization — semantics
         identical to the host conditional in :meth:`tick`. Operands are
         padded to the full ``max_batch`` decode batch (inactive slots get
         never-stopping dummies and are filtered out), so every tick reuses
         ONE compiled pipeline — it is warmed up in ``__init__`` to keep
         the jit compile off the first-token latency path."""
-        e = self.pum
+        dev = self.pum
         m = self.max_batch
         ones = np.ones(m, np.uint64)
         n_out = np.zeros(m, np.uint64)
@@ -140,13 +140,13 @@ class ServeEngine:
             pos[s] = self.pos[s]
             tok[s] = self.cur_token[s]
         limit = np.full(m, self.max_len - 1, np.uint64)
-        stop = e.or_(e.xor(e.less_than(n_out, cap), ones),      # len cap
-                     e.xor(e.less_than(pos, limit), ones))      # ctx cap
-        if 0 <= self.eos_id < (1 << e.width):
+        stop = ((dev.asarray(n_out) < cap) ^ ones) \
+            | ((dev.asarray(pos) < limit) ^ ones)   # len cap | ctx cap
+        if 0 <= self.eos_id < (1 << dev.width):
             eos = np.full(m, self.eos_id, np.uint64)
-            neq = e.reduce_bits(e.xor(tok, eos), "or")
-            stop = e.or_(stop, e.xor(neq, ones))                # EOS
-        full = np.asarray(stop).astype(bool)
+            neq = (dev.asarray(tok) ^ eos).reduce_bits("or")
+            stop = stop | (neq ^ ones)              # EOS
+        full = stop.to_numpy().astype(bool)
         return [bool(full[s]) for s in active]
 
     def tick(self) -> int:

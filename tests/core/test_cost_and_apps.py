@@ -15,6 +15,7 @@ from repro.core.destruction import (destroy_bank_fracdram,
                                     rowclone_destruction_cost)
 from repro.core.engine import PulsarEngine
 from repro.core.geometry import DramGeometry
+import repro.pum as pum
 from repro.core.profiles import MFR_H, MFR_M
 from repro.core.pulsar import PulsarExecutor
 from repro.core import realworld
@@ -186,7 +187,7 @@ FUSE = [False, True]  # every app kernel runs on the fused path too (PR 3)
 
 @pytest.mark.parametrize("fuse", FUSE)
 def test_bmi(fuse):
-    eng = PulsarEngine(mfr="M", fuse=fuse)
+    eng = pum.device(mfr="M", fuse=fuse)
     rng = np.random.default_rng(2)
     bitmaps = rng.integers(0, 2**64, (30, 128), dtype=np.uint64)
     got, pum_ms, cpu_ms = realworld.bmi_active_users(eng, bitmaps)
@@ -195,7 +196,7 @@ def test_bmi(fuse):
 
 @pytest.mark.parametrize("fuse", FUSE)
 def test_bitweaving(fuse):
-    eng = PulsarEngine(mfr="M", width=16, fuse=fuse)
+    eng = pum.device(mfr="M", width=16, fuse=fuse)
     rng = np.random.default_rng(3)
     col = rng.integers(0, 1000, 4096, dtype=np.uint64)
     got, pum_ms, _ = realworld.bitweaving_scan(eng, col, 100, 500)
@@ -203,8 +204,24 @@ def test_bitweaving(fuse):
 
 
 @pytest.mark.parametrize("fuse", FUSE)
+def test_bitweaving_boundary_ranges(fuse):
+    """c1 == 0 must not underflow the strict-compare sentinel (2**64-1
+    wrap) and a c2 at the width max must not overflow it out of width —
+    both bounds short-circuit to trivially-true predicates."""
+    eng = pum.device(mfr="M", width=16, fuse=fuse)
+    rng = np.random.default_rng(9)
+    col = rng.integers(0, 1 << 16, 2048, dtype=np.uint64)
+    got, _, _ = realworld.bitweaving_scan(eng, col, 0, 500)
+    assert got == int((col <= 500).sum())
+    got, _, _ = realworld.bitweaving_scan(eng, col, 100, (1 << 16) - 1)
+    assert got == int((col >= 100).sum())
+    got, _, _ = realworld.bitweaving_scan(eng, col, 0, (1 << 16) - 1)
+    assert got == col.size
+
+
+@pytest.mark.parametrize("fuse", FUSE)
 def test_triangle_count(fuse):
-    eng = PulsarEngine(mfr="M", fuse=fuse)
+    eng = pum.device(mfr="M", fuse=fuse)
     rng = np.random.default_rng(4)
     n = 24
     adj = np.triu((rng.random((n, n)) < 0.3).astype(np.uint8), 1)
@@ -215,7 +232,7 @@ def test_triangle_count(fuse):
 
 @pytest.mark.parametrize("fuse", FUSE)
 def test_knn(fuse):
-    eng = PulsarEngine(mfr="M", width=24, fuse=fuse)
+    eng = pum.device(mfr="M", width=24, fuse=fuse)
     rng = np.random.default_rng(5)
     q = rng.integers(0, 256, (4, 16), dtype=np.int64)
     r = rng.integers(0, 256, (64, 16), dtype=np.int64)
@@ -225,7 +242,7 @@ def test_knn(fuse):
 
 @pytest.mark.parametrize("fuse", FUSE)
 def test_image_segmentation(fuse):
-    eng = PulsarEngine(mfr="M", width=16, fuse=fuse)
+    eng = pum.device(mfr="M", width=16, fuse=fuse)
     rng = np.random.default_rng(6)
     img = rng.integers(0, 256, (32, 32), dtype=np.int64)
     colors = np.array([10, 90, 170, 250])
@@ -235,7 +252,7 @@ def test_image_segmentation(fuse):
 
 @pytest.mark.parametrize("fuse", FUSE)
 def test_xnor_conv_cost_positive(fuse):
-    eng = PulsarEngine(mfr="M", fuse=fuse)
+    eng = pum.device(mfr="M", fuse=fuse)
     ms = realworld.xnor_conv_cost(eng, 128, 128, 3, 3, 16, 16)
     assert ms > 0
 
@@ -248,8 +265,8 @@ def test_app_kernels_fused_matches_eager_results_and_stats():
     rng = np.random.default_rng(7)
 
     def pair(**kw):
-        return (PulsarEngine(mfr="M", **kw),
-                PulsarEngine(mfr="M", fuse=True, **kw))
+        return (pum.device(mfr="M", fuse=False, **kw),
+                pum.device(mfr="M", fuse=True, **kw))
 
     bitmaps = rng.integers(0, 2**64, (12, 96), dtype=np.uint64)
     e, f = pair()

@@ -177,7 +177,12 @@ def test_mul_div_stay_inside_the_fused_flush():
     got = run(fused)
     # No eager fallback: every handle is still pending before the flush.
     assert all(isinstance(x, LazyArray) and x._value is None for x in got)
-    assert fused._graph is not None and len(fused._graph.ops) == 5
+    # add + mul + sub = 3 ops; div and mod each lower to the shared
+    # divmod tuple op plus a selector (2 ops each) — flush-time CSE
+    # unifies the two divmods into ONE restoring-division pass.
+    assert fused._graph is not None and len(fused._graph.ops) == 7
+    opcodes = [op for op, _, _ in fused._graph.ops]
+    assert opcodes.count("divmod") == 2  # unified to 1 by optimize_program
     for w, g in zip(want, got):
         np.testing.assert_array_equal(w, np.asarray(g, np.uint64))
     assert eager.stats == fused.stats

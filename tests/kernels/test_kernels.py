@@ -323,13 +323,18 @@ _ARITH_DEMO = FusedProgram(
     ops=(FusedOp("mul", (0, 1)),
          FusedOp("div", (0, 1)),
          FusedOp("mod", (0, 1)),
-         FusedOp("div", (2, 1))),
-    outputs=(2, 3, 4, 5))
+         FusedOp("div", (2, 1)),
+         # the PR 4 tuple op: one divider pass feeding both selectors
+         FusedOp("divmod", (2, 1)),
+         FusedOp("fst", (6,)),
+         FusedOp("snd", (6,))),
+    outputs=(2, 3, 4, 5, 7, 8))
 
 
 def test_fused_program_mul_div_mod_all_evaluators():
     """The three evaluators agree on the arithmetic opcodes added in PR 3
-    (mul/div/mod), including division by zero."""
+    (mul/div/mod) and the PR 4 divmod/fst/snd tuple form, including
+    division by zero."""
     rng = np.random.default_rng(9)
     a = rng.integers(0, 256, 2048, dtype=np.uint64)
     b = rng.integers(0, 256, 2048, dtype=np.uint64)
@@ -348,6 +353,8 @@ def test_fused_program_mul_div_mod_all_evaluators():
     oracle = [(a * b) & 0xFF, np.where(b == 0, 0, a // safe),
               np.where(b == 0, 0, a % safe)]
     oracle.append(np.where(b == 0, 0, oracle[0] // safe))
+    oracle.append(oracle[3])                       # fst(divmod) == div
+    oracle.append(np.where(b == 0, 0, oracle[0] % safe))  # snd == mod
     for got, gvert, w in zip(word, vert, oracle):
         np.testing.assert_array_equal(
             np.asarray(got).view(np.uint32).astype(np.uint64), w)

@@ -1,0 +1,198 @@
+"""Operator-overload parity: every PumArray dunder against the NumPy
+oracle, across widths 8/16/32 and eager vs fused devices — including
+``__divmod__``, division by zero, reflected operands and scalar
+broadcast. The cost plane must charge identically in both modes."""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dep: fixed-seed fallback
+    from repro.testing import given, settings, st
+
+import repro.pum as pum
+
+pytestmark = pytest.mark.fused
+
+WIDTHS = [8, 16, 32]
+
+
+def _operands(width, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 1 << width, n, dtype=np.uint64)
+    b = rng.integers(0, 1 << width, n, dtype=np.uint64)
+    # Edge lanes: zeros, ones, the signed boundary, the max value, and
+    # div-by-zero divisors.
+    edges = np.array([0, 1, 1 << (width - 1), (1 << width) - 1], np.uint64)
+    a[:4], b[:4] = edges, edges[::-1]
+    b[::5] = 0
+    return a, b
+
+
+def _mask(width):
+    return np.uint64((1 << width) - 1)
+
+
+def _oracles(width, a, b):
+    m = _mask(width)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return {
+            "and": a & b, "or": a | b, "xor": a ^ b,
+            "add": (a + b) & m, "sub": (a - b) & m, "mul": (a * b) & m,
+            "div": a // np.where(b == 0, 1, b) * (b != 0),
+            "mod": a % np.where(b == 0, 1, b) * (b != 0),
+            "lt": (a < b).astype(np.uint64),
+            "gt": (b < a).astype(np.uint64),
+            "le": (a <= b).astype(np.uint64),
+            "ge": (a >= b).astype(np.uint64),
+            "popcount": np.array([bin(int(x)).count("1") for x in a],
+                                 np.uint64),
+            "reduce_and": (a == m).astype(np.uint64),
+            "reduce_or": (a != 0).astype(np.uint64),
+            "reduce_xor": np.array([bin(int(x)).count("1") & 1 for x in a],
+                                   np.uint64),
+        }
+
+
+def _results(dev, a, b):
+    x, y = dev.asarray(a), dev.asarray(b)
+    q, r = divmod(x, y)
+    out = {
+        "and": x & y, "or": x | y, "xor": x ^ y,
+        "add": x + y, "sub": x - y, "mul": x * y,
+        "div": x // y, "mod": x % y,
+        "divmod_q": q, "divmod_r": r,
+        "lt": x < y, "gt": x > y,
+        "le": x <= y, "ge": x >= y,
+        "popcount": x.popcount(),
+        "reduce_and": x.reduce_bits("and"),
+        "reduce_or": x.reduce_bits("or"),
+        "reduce_xor": x.reduce_bits("xor"),
+    }
+    return {k: np.asarray(v, np.uint64) for k, v in out.items()}
+
+
+@given(width=st.sampled_from(WIDTHS), seed=st.integers(0, 10_000))
+@settings(max_examples=6, deadline=None)
+def test_every_dunder_matches_numpy_eager_vs_fused(width, seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(33, 300))  # deliberately not a multiple of 32
+    a, b = _operands(width, max(n, 20), seed)
+    want = _oracles(width, a, b)
+    eager = pum.device(width=width, fuse=False)
+    fused = pum.device(width=width, fuse=True)
+    got_e, got_f = _results(eager, a, b), _results(fused, a, b)
+    for k, w in want.items():
+        np.testing.assert_array_equal(got_e[k], w, err_msg=f"eager {k}")
+        np.testing.assert_array_equal(got_f[k], w, err_msg=f"fused {k}")
+    # divmod == (div, mod), one restoring-division pass
+    for g in (got_e, got_f):
+        np.testing.assert_array_equal(g["divmod_q"], want["div"])
+        np.testing.assert_array_equal(g["divmod_r"], want["mod"])
+    assert eager.stats == fused.stats
+
+
+@pytest.mark.parametrize("width", WIDTHS)
+@pytest.mark.parametrize("fuse", [False, True])
+def test_divmod_divide_by_zero_yields_zero(width, fuse):
+    dev = pum.device(width=width, fuse=fuse)
+    a = np.array([7, 0, (1 << width) - 1], np.uint64)
+    z = np.zeros(3, np.uint64)
+    q, r = divmod(dev.asarray(a), z)
+    np.testing.assert_array_equal(np.asarray(q), z)
+    np.testing.assert_array_equal(np.asarray(r), z)
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+def test_reflected_operators_with_ndarray_left(fuse):
+    """ndarray OP PumArray must come back through the reflected dunders
+    (NumPy yields to us via __array_ufunc__ = None), not element-wise."""
+    dev = pum.device(width=16, fuse=fuse)
+    a = np.array([100, 40, 7], np.uint64)
+    p = dev.asarray(np.array([9, 40, 50], np.uint64))
+    cases = {
+        "and": (a & p, a & np.asarray(p)),
+        "or": (a | p, a | np.asarray(p)),
+        "xor": (a ^ p, a ^ np.asarray(p)),
+        "add": (a + p, a + np.asarray(p)),
+        "sub": (a - p, (a - np.asarray(p)) & np.uint64(0xFFFF)),
+        "mul": (a * p, a * np.asarray(p)),
+        "div": (a // p, a // np.asarray(p)),
+        "mod": (a % p, a % np.asarray(p)),
+    }
+    for k, (got, want) in cases.items():
+        assert isinstance(got, pum.PumArray), k
+        np.testing.assert_array_equal(np.asarray(got, np.uint64),
+                                      want.astype(np.uint64), err_msg=k)
+    q, r = divmod(a, p)
+    np.testing.assert_array_equal(np.asarray(q), a // np.asarray(p))
+    np.testing.assert_array_equal(np.asarray(r), a % np.asarray(p))
+    # comparisons: a < p dispatches to PumArray.__gt__ and vice versa
+    np.testing.assert_array_equal(np.asarray(a < p),
+                                  (a < np.asarray(p)).astype(np.uint64))
+    np.testing.assert_array_equal(np.asarray(p < a),
+                                  (np.asarray(p) < a).astype(np.uint64))
+    np.testing.assert_array_equal(np.asarray(a <= p),
+                                  (a <= np.asarray(p)).astype(np.uint64))
+    np.testing.assert_array_equal(np.asarray(a >= p),
+                                  (a >= np.asarray(p)).astype(np.uint64))
+
+
+@pytest.mark.parametrize("fuse", [False, True])
+def test_scalar_operands_broadcast_and_stay_fusable(fuse):
+    dev = pum.device(width=8, fuse=fuse)
+    x = dev.asarray(np.array([3, 5, 250], np.uint64))
+    y = (x + 6) * x
+    np.testing.assert_array_equal(y.to_numpy(),
+                                  np.array([27, 55, 0], np.uint64))
+
+
+def test_eq_ne_follow_ndarray_value_semantics():
+    dev = pum.device(width=16, fuse=True)
+    z = np.arange(4, dtype=np.uint64)
+    t1, t2 = dev.asarray(z) + z, dev.asarray(z) + z
+    np.testing.assert_array_equal(t1 == t2, np.full(4, True))
+    np.testing.assert_array_equal(t1 != t2, np.full(4, False))
+    with pytest.raises(ValueError):  # ambiguous, exactly like ndarray
+        bool(dev.asarray(z) + z)
+    with pytest.raises(TypeError):
+        hash(t1)
+
+
+def test_raw_packed_bitmap_operators_bit_exact():
+    """Plane-wise operators on full-range uint64 words route through the
+    raw planewise path in fused mode — bit-exact with eager."""
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2**64, 65, dtype=np.uint64)
+    b = rng.integers(0, 2**64, 65, dtype=np.uint64)
+    eager = pum.device(width=32, fuse=False)
+    fused = pum.device(width=32, fuse=True)
+
+    def chain(dev):
+        t = dev.asarray(a) & b
+        t = t ^ a
+        return (t | b).to_numpy()
+
+    got_e, got_f = chain(eager), chain(fused)
+    np.testing.assert_array_equal(got_e, got_f)
+    np.testing.assert_array_equal(got_f, ((a & b) ^ a) | b)
+    assert eager.stats == fused.stats
+    # arithmetic on out-of-width operands still fails loudly when fused
+    with pytest.raises(ValueError, match="modulo"):
+        fused.asarray(a) + b
+
+
+def test_array_protocol_and_ndarray_conveniences():
+    dev = pum.device(width=16, fuse=True)
+    m = np.arange(12, dtype=np.uint64).reshape(3, 4)
+    t = dev.asarray(m) + m
+    assert t.shape == (3, 4) and t.size == 12 and t.ndim == 2
+    assert t.dtype == np.uint64 and len(t) == 3
+    assert "PumArray" in repr(t)
+    np.testing.assert_array_equal(t.reshape(4, 3), (2 * m).reshape(4, 3))
+    assert t.sum() == 2 * m.sum()
+    assert t.astype(np.int32).dtype == np.int32
+    np.testing.assert_array_equal(np.asarray(t, np.float64),
+                                  (2 * m).astype(np.float64))
+    np.testing.assert_array_equal(t.to_numpy(), 2 * m)

@@ -1,0 +1,28 @@
+"""The CI API-snapshot checker must pass against the current tree (and
+actually detect drift)."""
+
+import importlib.util
+import pathlib
+
+TOOLS = pathlib.Path(__file__).resolve().parents[2] / "tools"
+
+
+def _load_check_api():
+    spec = importlib.util.spec_from_file_location(
+        "check_api", TOOLS / "check_api.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_public_surface_matches_snapshot(capsys):
+    mod = _load_check_api()
+    assert mod.main([]) == 0
+    assert "surface OK" in capsys.readouterr().out
+
+
+def test_snapshot_detects_drift(capsys):
+    mod = _load_check_api()
+    mod.EXPECTED["PumArray"] = mod.EXPECTED["PumArray"] + ["__matmul__"]
+    assert mod.main([]) == 1
+    assert "missing exports" in capsys.readouterr().err

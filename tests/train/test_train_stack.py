@@ -73,6 +73,66 @@ def test_grad_compression_error_feedback():
     np.testing.assert_allclose(acc, want, atol=2e-3)
 
 
+def test_sign_bitmaps_pack_roundtrip_and_pum_parity():
+    """The 1-bit sign/mask path: pack/unpack round-trips, the PuM-routed
+    wire bitmap and MAJ3 agree with direct NumPy, and an eager device
+    produces bit-identical bitmaps (and identical cost-plane charges) to
+    a fused one — the raw packed-bitmap planewise contract."""
+    import repro.pum as pum
+    rng = np.random.default_rng(7)
+    t = rng.standard_normal(1000).astype(np.float32)
+    sign_w, mask_w, scale = grad_compress.sign_mask_bitmaps(t, 0.5)
+    np.testing.assert_array_equal(
+        grad_compress.unpack_bitmap(sign_w, t.size), t < 0)
+    np.testing.assert_array_equal(
+        grad_compress.unpack_bitmap(mask_w, t.size), np.abs(t) >= 0.5)
+    assert scale == pytest.approx(float(np.abs(t[np.abs(t) >= 0.5]).mean()))
+
+    eager = pum.device(width=32, fuse=False)
+    fused = pum.device(width=32, fuse=True)
+    wire_e = grad_compress.pum_wire_bitmap(sign_w, mask_w, eager)
+    wire_f = grad_compress.pum_wire_bitmap(sign_w, mask_w, fused)
+    np.testing.assert_array_equal(wire_e, sign_w & mask_w)
+    np.testing.assert_array_equal(wire_e, wire_f)
+
+    votes = [grad_compress.pack_bitmap(rng.standard_normal(1000) < 0)
+             for _ in range(3)]
+    maj_e = grad_compress.pum_sign_majority3(*votes, eager)
+    maj_f = grad_compress.pum_sign_majority3(*votes, fused)
+    want = (votes[0] & votes[1]) | (votes[1] & votes[2]) \
+        | (votes[0] & votes[2])
+    np.testing.assert_array_equal(maj_e, want)
+    np.testing.assert_array_equal(maj_e, maj_f)
+    assert eager.stats == fused.stats
+    assert eager.stats.latency_ns > 0  # the bitmap ops were priced
+
+
+def test_sign_compression_error_feedback_tracks_true_grads():
+    """1-bit signSGD-style compression with error feedback stays unbiased
+    over time, like the int8 path (eager and fused devices identical)."""
+    import repro.pum as pum
+    rng = np.random.default_rng(1)
+    true = [rng.standard_normal(256).astype(np.float32) * 0.01
+            for _ in range(60)]
+    accs = []
+    for fuse in (False, True):
+        dev = pum.device(width=32, fuse=fuse)
+        err = {"g": jnp.zeros(256)}
+        acc = np.zeros(256)
+        for g in true:
+            deq, err = grad_compress.compress_grads_sign_with_feedback(
+                {"g": jnp.asarray(g)}, err, device=dev, tau_factor=0.5)
+            acc += np.asarray(deq["g"])
+        accs.append(acc)
+    np.testing.assert_array_equal(accs[0], accs[1])  # eager == fused
+    want = np.sum(true, axis=0)
+    # 1-bit is coarser than int8: error feedback still keeps the running
+    # sum tracking the true gradient direction.
+    cos = float(np.dot(accs[0], want)
+                / (np.linalg.norm(accs[0]) * np.linalg.norm(want)))
+    assert cos > 0.9
+
+
 def test_train_loop_loss_decreases(tmp_path):
     cfg = get_smoke_config("qwen1.5-0.5b")
     tcfg = TrainConfig(learning_rate=1e-2, warmup_steps=5, total_steps=60,
