@@ -6,6 +6,13 @@ The speedup from overlapped issue is *measured from the scheduled trace*,
 not assumed: tFAW/tRRD cap the activation rate, so effective parallelism
 saturates well below the bank count (the honest version of the paper's
 16-bank scaling), and REF injection shows up as a small extra stall.
+
+The ``bankpar.refpost_p*`` rows sweep the refresher's REF postponing
+policy (JEDEC allows batching up to 8 REFs into one rank lockout)
+through ``MemoryController.batch_cost`` — the same cost-plane entry
+point the engine prices through (``EngineConfig.ref_postponing``):
+postponing trades lockout frequency for lockout length, so the
+steady-state refresh factor shifts while the raw makespan is untouched.
 """
 
 from __future__ import annotations
@@ -48,4 +55,19 @@ def run() -> list[Row]:
             f"speedup_vs_seq={seq_ns / tr.total_ns:.2f}x "
             f"refreshes={tr.n_refreshes} "
             f"refresh_stall={tr.refresh_stall_ns:.0f}ns"))
+
+    # REF postponing sweep: batch_cost prices the same 16-bank MAJ unit
+    # under each policy — refresh_factor is the steady-state slowdown the
+    # engine multiplies into every op's latency.
+    for post in (1, 2, 4, 8):
+        ctrl = MemoryController(n_banks=16, postponing=post)
+        us, bc = timed_us(ctrl.batch_cost, unit, 16, repeat=1)
+        rows.append(row(
+            f"bankpar.refpost_p{post}", us,
+            f"refresh_factor={bc.refresh_factor:.4f} "
+            f"amortized={bc.amortized_ns:.0f}ns "
+            f"makespan={bc.makespan_ns:.0f}ns "
+            f"refreshes={bc.n_refreshes} "
+            f"lockout={ctrl.t.trp + ctrl.trfc * post:.0f}ns "
+            f"(postponing={post} REFs per rank lockout)"))
     return rows

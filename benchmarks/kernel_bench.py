@@ -131,6 +131,73 @@ def _bench_fused_mul() -> list[Row]:
     ]
 
 
+def _bench_fused_mul64() -> list[Row]:
+    """Width-64 arithmetic through the fused pipeline: the 64-bit plane
+    layout routes to the additively registered ``words-cpu-64``
+    evaluator (NumPy word domain on CPU) — the program that used to be
+    forced onto the per-op eager path."""
+    rng = np.random.default_rng(17)
+    n = 32 * W
+    width = 64
+    a, b, c = (rng.integers(0, 1 << 63, n, dtype=np.uint64)
+               for _ in range(3))
+    eager = pum.device(width=width, fuse=False)
+    fused = pum.device(width=width, fuse=True)
+
+    def run_eager():
+        return _engine_mulprog16(eager, a, b, c).to_numpy()
+
+    def run_fused():
+        return _engine_mulprog16(fused, a, b, c).to_numpy()
+
+    want, got = run_eager(), run_fused()  # warm-up builds the pipeline
+    ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
+    us_e, _ = timed_us(run_eager)
+    us_f, _ = timed_us(run_fused)
+    return [
+        row("engine.eager_mul64", us_e,
+            f"{16 * n / us_e:.0f} M ops*elem/s (per-op dispatch, "
+            f"width {width})"),
+        row("engine.fused_mul64", us_f,
+            f"{16 * n / us_f:.0f} M ops*elem/s ({us_e / us_f:.1f}x over "
+            f"eager; 64-bit plane layout via words-cpu-64 — capability "
+            f"row: the NumPy word path pays the shared-divider divmod, "
+            f"the TPU vertical evaluator is the wide perf path; "
+            f"bit_exact+stats_match={ok})"),
+    ]
+
+
+def _bench_sharded_prog16() -> list[Row]:
+    """The 16-op staple through the ``shard-words`` fused backend: the
+    program's word axis partitions across jax.devices() (one device on
+    this host unless XLA forces more) — one flush, every device runs its
+    slice of the same fused program."""
+    import jax
+
+    rng = np.random.default_rng(19)
+    n = 32 * W
+    a, b, c = (rng.integers(0, 2**32, n, dtype=np.uint64) for _ in range(3))
+    eager = pum.device(width=32, fuse=False)
+    sharded = pum.device(width=32, fuse=True,
+                         fused_backend="shard-words")
+
+    def run_eager():
+        return _engine_prog16(eager, a, b, c).to_numpy()
+
+    def run_sharded():
+        return _engine_prog16(sharded, a, b, c).to_numpy()
+
+    want, got = run_eager(), run_sharded()  # warm-up compiles per shard
+    ok = bool(np.array_equal(want, got)) and eager.stats == sharded.stats
+    us_s, _ = timed_us(run_sharded)
+    return [
+        row("engine.sharded_prog16", us_s,
+            f"{16 * n / us_s:.0f} M ops*elem/s across "
+            f"{len(jax.devices())} device(s) (shard-words word-axis "
+            f"partition; bit_exact+stats_match={ok})"),
+    ]
+
+
 def _bench_app_kernels() -> list[Row]:
     """realworld packed-bitmap kernels, eager vs fused routing (the raw
     planewise path): host wall time of the whole kernel call; each call
@@ -205,5 +272,7 @@ def run() -> list[Row]:
 
     rows.extend(_bench_fused_vs_eager())
     rows.extend(_bench_fused_mul())
+    rows.extend(_bench_fused_mul64())
+    rows.extend(_bench_sharded_prog16())
     rows.extend(_bench_app_kernels())
     return rows

@@ -17,10 +17,12 @@ sites *look capabilities up*:
 * the fused pipeline resolves a :class:`FusedProgram` to a **fused
   evaluator** (capability ``"fused"``) by :func:`select_backend` — the
   highest-priority available backend whose ``max_width`` covers the
-  program.
+  program and whose declared ``layouts`` include the program's plane
+  layout (the lane word format, see ``repro.kernels.plane_layout``).
 
 A future backend is an additive ``register_backend(...)`` call — no
-engine or compiler edits. The full contract (builder signatures per
+engine or compiler edits; the width-64 evaluators and the multi-device
+``shard-words`` pipeline below are exactly that. The full contract (builder signatures per
 capability) is documented in ``docs/api.md``; ``repro.pum`` re-exports
 the registry functions as the public surface.
 
@@ -54,7 +56,9 @@ class BackendSpec:
     ``available`` gates automatic selection (e.g. the Pallas evaluator is
     only auto-selected on a TPU host); an unavailable backend can still be
     requested by name. ``max_width`` bounds the element width the backend
-    can evaluate; ``priority`` breaks ties (higher wins).
+    can evaluate; ``layouts`` declares the plane-layout word sizes (32/64
+    — see ``repro.kernels.plane_layout``) its pipelines consume;
+    ``priority`` breaks ties (higher wins).
     """
     name: str
     builder: Callable[..., Any]
@@ -62,6 +66,7 @@ class BackendSpec:
     max_width: int = 32
     priority: int = 0
     available: Callable[[], bool] = lambda: True
+    layouts: frozenset[int] = frozenset({32})
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -70,18 +75,20 @@ _REGISTRY: dict[str, BackendSpec] = {}
 def register_backend(name: str, builder: Callable[..., Any], *,
                      capabilities=("fused",), max_width: int = 32,
                      priority: int = 0,
-                     available: Callable[[], bool] | None = None
-                     ) -> BackendSpec:
+                     available: Callable[[], bool] | None = None,
+                     layouts=(32,)) -> BackendSpec:
     """Register (or replace) a backend under ``name`` and return its spec.
 
     Re-registering an existing name replaces it — callers own their
     namespace; the built-in names are ``fast``, ``sim``, ``words-cpu``,
-    ``pallas-tpu`` and ``ref-vertical``.
+    ``pallas-tpu``, ``ref-vertical``, their ``-64`` layout variants and
+    the multi-device ``shard-words`` pipeline.
     """
     spec = BackendSpec(name=name, builder=builder,
                        capabilities=frozenset(capabilities),
                        max_width=max_width, priority=priority,
-                       available=available or (lambda: True))
+                       available=available or (lambda: True),
+                       layouts=frozenset(int(b) for b in layouts))
     _REGISTRY[name] = spec
     return spec
 
@@ -109,16 +116,22 @@ def available_backends(capability: str | None = None) -> tuple[str, ...]:
                  if capability is None or capability in s.capabilities)
 
 
-def select_backend(*, require, width: int | None = None) -> BackendSpec:
+def select_backend(*, require, width: int | None = None,
+                   layout=None) -> BackendSpec:
     """Capability lookup: the highest-priority *available* backend whose
-    capabilities cover ``require`` and whose ``max_width`` covers
-    ``width``. Raises ``LookupError`` when nothing matches."""
+    capabilities cover ``require``, whose ``max_width`` covers ``width``,
+    and whose declared ``layouts`` include ``layout`` (a word-bit count
+    or a ``PlaneLayout``; ``None`` skips the filter). Raises
+    ``LookupError`` when nothing matches."""
     need = frozenset((require,) if isinstance(require, str) else require)
+    wb = getattr(layout, "word_bits", layout)
     best: BackendSpec | None = None
     for spec in _REGISTRY.values():
         if not need <= spec.capabilities:
             continue
         if width is not None and spec.max_width < width:
+            continue
+        if wb is not None and wb not in spec.layouts:
             continue
         if not spec.available():
             continue
@@ -128,6 +141,7 @@ def select_backend(*, require, width: int | None = None) -> BackendSpec:
         raise LookupError(
             f"no available backend with capabilities {sorted(need)}"
             + (f" at width {width}" if width is not None else "")
+            + (f" on the {wb}-bit plane layout" if wb is not None else "")
             + f"; registered: {sorted(_REGISTRY)}")
     return best
 
@@ -179,6 +193,13 @@ def _build_ref_vertical_pipeline(program, interpret: bool = False,
         program, use_pallas=False, interpret=interpret, donate=donate)
 
 
+def _build_sharded_words_pipeline(program, interpret: bool = False,
+                                  donate: bool = False):
+    from repro.kernels import fused_program
+    return fused_program.build_sharded_words_pipeline(program,
+                                                      donate=donate)
+
+
 def on_tpu() -> bool:
     """The one TPU-detection rule: gates Pallas auto-selection here and
     the interpret-mode fallback in kernels/{ops,fused_program}.py."""
@@ -186,10 +207,20 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def multi_device() -> bool:
+    """Gates auto-selection of the sharded word pipeline: with one local
+    device the plain word evaluator is the same computation minus the
+    placement overhead."""
+    import jax
+    return len(jax.devices()) > 1
+
+
 register_backend("fast", _build_fast_dataplane,
-                 capabilities=("eager",), max_width=64, priority=10)
+                 capabilities=("eager",), max_width=64, priority=10,
+                 layouts=(32, 64))
 register_backend("sim", _build_sim_dataplane,
-                 capabilities=("eager", "sim"), max_width=64)
+                 capabilities=("eager", "sim"), max_width=64,
+                 layouts=(32, 64))
 register_backend("words-cpu", _build_words_pipeline,
                  capabilities=("fused",), max_width=32, priority=10)
 register_backend("pallas-tpu", _build_pallas_pipeline,
@@ -200,3 +231,25 @@ register_backend("pallas-tpu", _build_pallas_pipeline,
 register_backend("ref-vertical", _build_ref_vertical_pipeline,
                  capabilities=("fused", "vertical", "debug"), max_width=32,
                  priority=-10, available=lambda: False)
+
+# 64-bit plane-layout evaluators: the SAME builders, registered
+# additively over the wider layout — the registry extension story the
+# module docstring promises. The engine reaches them whenever its layout
+# is 64-bit (explicit EngineConfig.layout=64 or any width > 32).
+register_backend("words-cpu-64", _build_words_pipeline,
+                 capabilities=("fused",), max_width=64, priority=10,
+                 layouts=(64,))
+register_backend("pallas-tpu-64", _build_pallas_pipeline,
+                 capabilities=("fused", "vertical"), max_width=64,
+                 priority=20, available=on_tpu, layouts=(64,))
+register_backend("ref-vertical-64", _build_ref_vertical_pipeline,
+                 capabilities=("fused", "vertical", "debug"), max_width=64,
+                 priority=-10, available=lambda: False, layouts=(64,))
+
+# Multi-device sharded word pipeline: partitions the program's word axis
+# across jax.devices() (jax.sharding mesh placement). Auto-selected only
+# on multi-device hosts (beats words-cpu, loses to single-chip Pallas);
+# always requestable by name (EngineConfig.fused_backend="shard-words").
+register_backend("shard-words", _build_sharded_words_pipeline,
+                 capabilities=("fused", "sharded"), max_width=32,
+                 priority=15, available=multi_device)

@@ -46,11 +46,23 @@ layout holds ``width`` planes); arithmetic operands with bits at or above
 ``width`` are rejected at record time rather than silently truncated,
 because eager ops compute on raw uint64 values. The *plane-wise* ops
 (``and_``/``or_``/``xor``) instead switch to a raw packed-bitmap mode on
-out-of-width operands: each 64-bit word splits into two 32-bit lanes
-(bit-exact for bitwise ops at any value range — this is what realworld's
-packed-bitmap kernels route through), and the halves are re-joined at
-materialization. Cost charging is identical either way: ops are priced on
-the caller-visible element count before the dataplane splits lanes.
+out-of-width operands: each 64-bit word reinterprets onto the plane
+layout's lanes (two 32-bit lanes per word on the 32-bit layout, the word
+itself on the 64-bit layout — bit-exact for bitwise ops at any value
+range; this is what realworld's packed-bitmap kernels route through),
+and the lanes are re-joined at materialization. Cost charging is
+identical either way: ops are priced on the caller-visible element count
+before the dataplane splits lanes.
+
+Plane layouts: the lane word format is an explicit
+:class:`~repro.kernels.plane_layout.PlaneLayout` (default: the narrowest
+canonical layout holding ``width`` — 32-bit up to width 32, 64-bit
+above). The fused pipeline, leaf snapshots and the raw lane split all
+derive from it, and evaluator selection filters the backend registry by
+it — width-64 fused execution is the 64-bit layout plus the additively
+registered ``*-64`` evaluators, not a special case. ``fused_backend``
+pins a specific registered fused evaluator by name (e.g. the
+multi-device ``"shard-words"`` pipeline).
 """
 
 from __future__ import annotations
@@ -61,13 +73,15 @@ import weakref
 
 import numpy as np
 
-from repro.backends import get_backend
+from repro.backends import get_backend, select_backend
 from repro.core.charact import SuccessRateDb, default_db
 from repro.core.cost_model import CostModel, OpCost, ZERO
 from repro.core.geometry import PAPER_MODULE
 from repro.core.profiles import PROFILES
 from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
                                          optimize_program)
+from repro.kernels.plane_layout import (PlaneLayout, get_layout,
+                                        layout_for_width)
 
 
 def _warn_deprecated(method: str, replacement: str) -> None:
@@ -204,13 +218,17 @@ class _OpGraph:
     died unreferenced are dead code — never materialized).
 
     ``raw=True`` marks a packed-bitmap graph: plane-wise ops on raw uint64
-    words, each split into two 32-bit dataplane lanes (``n`` counts lanes,
-    width is fixed at 32). A graph is entirely raw or entirely value-mode;
-    the engine flushes at mode boundaries."""
+    words, each reinterpreted as ``layout.raw_lanes_per_word`` dataplane
+    lanes (two 32-bit lanes on the 32-bit layout, one full-width lane on
+    the 64-bit layout; ``n`` counts lanes, width is the layout's word
+    size). A graph is entirely raw or entirely value-mode; the engine
+    flushes at mode boundaries."""
 
-    def __init__(self, n: int, width: int, raw: bool = False):
+    def __init__(self, n: int, width: int, layout: PlaneLayout,
+                 raw: bool = False):
         self.n = n                      # dataplane lane count (all values)
         self.width = width
+        self.layout = layout
         self.raw = raw
         self.leaves: list[np.ndarray] = []
         self._leaf_ids: dict[int, int] = {}
@@ -221,25 +239,27 @@ class _OpGraph:
         self.results: list = []         # weakref per op
 
     def leaf_id(self, arr: np.ndarray) -> tuple[str, int]:
-        """Register an operand, snapshotting its content (mod 2**32 — the
-        pipeline keeps planes[:width]): the graph must not alias caller
-        buffers, or mutations between record and flush would silently
-        diverge from eager results. Re-feeding the same array object dedups
-        to one pipeline input, guarded by a sampled content fingerprint so
-        an in-place mutation between two recorded uses registers a fresh
-        leaf instead of reusing the stale snapshot. (The guard samples 257
-        positions; a mutation confined to unsampled elements can still
-        alias — call flush() before mutating operands in place.)"""
+        """Register an operand, snapshotting its content (mod the layout
+        word — the pipeline keeps planes[:width]): the graph must not
+        alias caller buffers, or mutations between record and flush would
+        silently diverge from eager results. Re-feeding the same array
+        object dedups to one pipeline input, guarded by a sampled content
+        fingerprint so an in-place mutation between two recorded uses
+        registers a fresh leaf instead of reusing the stale snapshot.
+        (The guard samples 257 positions; a mutation confined to
+        unsampled elements can still alias — call flush() before mutating
+        operands in place.)"""
         key = id(arr)
         flat = arr.ravel()
-        if self.raw:  # split each 64-bit word into two 32-bit lanes
-            flat = np.ascontiguousarray(flat).view(np.uint32)
+        if self.raw:  # reinterpret uint64 words as layout lanes
+            flat = self.layout.raw_lanes(flat)
         idx = self._leaf_ids.get(key)
         if idx is not None and np.array_equal(flat[self._fp_idx],
                                               self._fps[idx]):
             return ("leaf", idx)
-        # Width guard is value-mode only: raw lanes are uint32 and the raw
-        # graph width is 32, so the scan could never fire there.
+        # Width guard is value-mode only: raw lanes carry full words and
+        # the raw graph width is the word size, so the scan could never
+        # fire there.
         if not self.raw and self.width < 64 and flat.size \
                 and int(flat.max()) >> self.width:
             # Loud, not silent: eager ops compute on raw uint64 values
@@ -251,7 +271,7 @@ class _OpGraph:
                 f"inputs to the engine width or use fuse=False")
         i = len(self.leaves)
         self._leaf_ids[key] = i  # latest content owns the dedup slot
-        self.leaves.append(flat.astype(np.uint32))
+        self.leaves.append(flat.astype(self.layout.np_dtype))
         self._fps.append(flat[self._fp_idx])
         # Pin the original: the id() dedup key is only valid while the
         # caller's array stays alive.
@@ -316,7 +336,9 @@ class PulsarEngine:
                  controller=None, seed: int = 0, fuse: bool = False,
                  flush_threshold: int | None = 1024,
                  flush_memory_bytes: int | None = 1 << 30,
-                 donate_leaves: bool = False):
+                 donate_leaves: bool = False, layout=None,
+                 fused_backend: str | None = None,
+                 ref_postponing: int = 1):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -326,13 +348,37 @@ class PulsarEngine:
         self.seed = seed
         self.use_pulsar = use_pulsar  # False => FracDRAM baseline costs
         self.chained = chained and use_pulsar  # chained-staging (§Perf P4)
+        # Plane layout: the lane word format of the fused dataplane.
+        # Default: the narrowest canonical layout holding `width` bits
+        # (width <= 32 keeps the exact pre-layout 32-bit behavior).
+        self.layout = (layout_for_width(width) if layout is None
+                       else get_layout(layout))
+        if width > self.layout.word_bits:
+            raise ValueError(
+                f"width {width} does not fit the {self.layout.word_bits}"
+                f"-bit plane layout {self.layout.name!r}")
         # controller="auto" builds a MemoryController over `banks` banks;
         # None keeps the legacy closed-form bank divide (reproduces the
-        # pre-controller numbers exactly).
+        # pre-controller numbers exactly). `ref_postponing` batches up to
+        # N REF commands into one rank lockout (JEDEC allows 8) — longer
+        # but rarer refresh windows, priced by batch_cost.
+        if not 1 <= ref_postponing <= 8:
+            raise ValueError(
+                f"ref_postponing must be in [1, 8] (JEDEC allows "
+                f"postponing up to 8 REFs), got {ref_postponing}")
+        if ref_postponing != 1 and controller != "auto":
+            # Loud, not silently inert: the closed-form path never models
+            # refresh, and a prebuilt controller carries its own policy.
+            raise ValueError(
+                "ref_postponing requires controller='auto' (with "
+                "controller=None refresh is not modeled; a prebuilt "
+                "MemoryController sets postponing= itself)")
         if controller == "auto":
             from repro.controller import MemoryController
-            controller = MemoryController(n_banks=banks)
+            controller = MemoryController(n_banks=banks,
+                                          postponing=ref_postponing)
         self.controller = controller
+        self.ref_postponing = ref_postponing
         self.cost = CostModel(row_bits=row_bits, controller=controller)
         self.db = success_db or default_db()
         self.stats = EngineStats()
@@ -360,17 +406,38 @@ class PulsarEngine:
                 f"(builder returns None, e.g. 'fast'); backend "
                 f"{backend!r} routes ops through an ALU and stays "
                 f"per-op")
-        if fuse and width > 32:
-            # The fused leaf packing is 32-bit (snapshots land in uint32
-            # lanes), so no registered evaluator can cover wider values
-            # yet; generalizing the packing is the ROADMAP width-64 item.
-            # pum.Device falls back to eager automatically.
-            raise ValueError(
-                "fused pipeline supports width <= 32 (32-bit leaf "
-                "packing); use fuse=False for wider values")
+        if fused_backend is not None:
+            fspec = get_backend(fused_backend)
+            if "fused" not in fspec.capabilities:
+                raise ValueError(
+                    f"fused_backend {fused_backend!r} has no fused "
+                    f"evaluator (capabilities: "
+                    f"{sorted(fspec.capabilities)})")
+            if width > fspec.max_width \
+                    or self.layout.word_bits not in fspec.layouts:
+                raise ValueError(
+                    f"fused_backend {fused_backend!r} covers width <= "
+                    f"{fspec.max_width} on layouts "
+                    f"{sorted(fspec.layouts)}; engine is width {width} "
+                    f"on the {self.layout.word_bits}-bit layout")
+        elif fuse:
+            # Layout capability query (replaces the old hardwired
+            # `width > 32` guard): some registered fused evaluator must
+            # cover this width on this plane layout. pum.Device falls
+            # back to eager automatically when nothing does.
+            try:
+                select_backend(require="fused", width=width,
+                               layout=self.layout)
+            except LookupError as e:
+                raise ValueError(
+                    f"no registered fused evaluator covers width {width} "
+                    f"on the {self.layout.word_bits}-bit plane layout "
+                    f"({e}); use fuse=False or register_backend() one"
+                ) from None
         if flush_threshold is not None and flush_threshold < 1:
             raise ValueError("flush_threshold must be >= 1 or None")
         self.fuse = fuse
+        self.fused_backend = fused_backend
         self.flush_threshold = flush_threshold
         self.flush_memory_bytes = flush_memory_bytes
         self.donate_leaves = donate_leaves
@@ -556,12 +623,15 @@ class PulsarEngine:
 
     def _use_raw(self, operands: tuple) -> bool:
         """Plane-wise ops route through the raw packed-bitmap graph when
-        any operand is out of width (bit-exact: bitwise ops split cleanly
-        into two 32-bit lanes per 64-bit word) or when a raw graph of the
-        same lane count is already open (in-width words join it losslessly
-        — their high lanes are zero)."""
+        any operand is out of width (bit-exact: bitwise ops reinterpret
+        cleanly onto the layout's lanes — two 32-bit lanes per word on
+        the 32-bit layout, the word itself on the 64-bit one) or when a
+        raw graph of the same lane count is already open (in-width words
+        join it losslessly — their high bits are zero)."""
         g = self._graph
-        if g is not None and g.raw and g.n == 2 * operands[0].size:
+        if g is not None and g.raw \
+                and g.n == self.layout.raw_lanes_per_word \
+                * operands[0].size:
             return True
         return any(self._is_raw_operand(x) for x in operands)
 
@@ -578,14 +648,16 @@ class PulsarEngine:
         program output (its handle only carries the op index for selector
         args): it records a dead weakref so flush() can't see it live."""
         shape = operands[0].shape
-        n = operands[0].size * (2 if raw else 1)  # dataplane lanes
+        lanes_per_word = self.layout.raw_lanes_per_word if raw else 1
+        n = operands[0].size * lanes_per_word  # dataplane lanes
         g = self._graph
         if g is not None and (g.n != n or g.raw != raw):
             self.flush()  # one program = one lane count and one mode
             g = None
         if g is None:
-            g = self._graph = _OpGraph(n, 32 if raw else self.width,
-                                       raw=raw)
+            g = self._graph = _OpGraph(
+                n, self.layout.word_bits if raw else self.width,
+                self.layout, raw=raw)
         args = []
         for x in operands:
             if isinstance(x, LazyArray) and x._value is None \
@@ -605,13 +677,14 @@ class PulsarEngine:
 
     def _graph_over_threshold(self, g: _OpGraph) -> bool:
         """Auto-flush policy: graph-size (recorded ops) and estimated
-        memory (4 bytes per lane per held value: leaf snapshots plus the
-        pipeline's per-op intermediates)."""
+        memory (one layout word per lane per held value: leaf snapshots
+        plus the pipeline's per-op intermediates)."""
         if self.flush_threshold is not None \
                 and len(g.ops) >= self.flush_threshold:
             return True
         if self.flush_memory_bytes is not None:
-            est = 4 * g.n * (len(g.leaves) + len(g.ops))
+            est = g.layout.nbytes_per_word * g.n \
+                * (len(g.leaves) + len(g.ops))
             return est >= self.flush_memory_bytes
         return False
 
@@ -642,17 +715,19 @@ class PulsarEngine:
             width=g.width, n_inputs=n_leaves,
             ops=tuple(FusedOp(opcode, tuple(vid(a) for a in args), param)
                       for opcode, args, param in g.ops),
-            outputs=tuple(n_leaves + i for i in out_idx))
+            outputs=tuple(n_leaves + i for i in out_idx),
+            layout=g.layout)
         program, out_pos, leaf_map = optimize_program(program)
-        pad = (-g.n) % 32
+        pad = (-g.n) % 32  # every pipeline tiles lanes in groups of 32
         leaves = []
-        for li in leaf_map:  # uint32 snapshots (see _OpGraph.leaf_id)
+        for li in leaf_map:  # layout-dtype snapshots (_OpGraph.leaf_id)
             flat = g.leaves[li]
             if pad:
                 flat = np.pad(flat, (0, pad))
-            leaves.append(flat.view(np.int32))
+            leaves.append(g.layout.to_wire(flat))
         try:
-            outs = get_pipeline(program, donate=self.donate_leaves)(*leaves)
+            outs = get_pipeline(program, donate=self.donate_leaves,
+                                backend=self.fused_backend)(*leaves)
         except BaseException:
             # Keep pending handles recoverable after a transient failure
             # (interrupt, backend OOM): restore the graph so a later
@@ -661,11 +736,11 @@ class PulsarEngine:
             raise
         for i, pos in zip(out_idx, out_pos):
             lz = live[i]
-            u32 = np.asarray(outs[pos]).view(np.uint32)[:g.n]
-            if g.raw:  # re-join the two 32-bit lanes of each 64-bit word
-                val = u32.copy().view(np.uint64)
+            lanes = g.layout.from_wire(outs[pos])[:g.n]
+            if g.raw:  # re-join the lanes of each caller uint64 word
+                val = g.layout.join_raw(lanes)
             else:
-                val = u32.astype(np.uint64)
+                val = lanes.astype(np.uint64)
             lz._value = val.reshape(lz.shape)
             # A materialized handle never needs the graph again — drop the
             # references so surviving handles don't pin the leaf snapshots

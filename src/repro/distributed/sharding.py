@@ -225,3 +225,22 @@ def cache_shardings(cfg, mesh: Mesh, cache_shape: Any,
 
 def replicated(mesh: Mesh, tree: Any):
     return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+# --------------------------------------------------------------------- #
+# PuM word-axis sharding (the fused dataplane's `shard-words` backend)
+# --------------------------------------------------------------------- #
+
+
+def words_mesh(devices=None) -> Mesh:
+    """1-D ``("words",)`` mesh over the local devices: the PuM fused
+    dataplane is elementwise across packed words, so the word axis is the
+    one natural partition dimension (every device runs the same fused
+    program on its slice, no collectives)."""
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.array(devices), ("words",))
+
+
+def words_sharding(mesh: Mesh) -> NamedSharding:
+    """Leading-axis sharding of a flat packed-word array over ``mesh``."""
+    return NamedSharding(mesh, P("words"))

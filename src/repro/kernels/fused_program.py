@@ -50,11 +50,21 @@ never itself be a program output. The engine lowers ``div``/``mod``/
 operands CSE into one divider pass at flush (the standalone ``div``/
 ``mod`` opcodes remain valid IR for directly-authored programs).
 
+Word format: a program carries a :class:`~repro.kernels.plane_layout.
+PlaneLayout` naming its lane word (32- or 64-bit). Every evaluator is
+parameterized over it — SWAR popcount masks, div/mod selector constants
+and the width mask derive from the layout instead of being uint32
+literals, and the vertical pack/unpack tiles a 64-bit lane as two 32x32
+transposes. The pipeline ABI stays flat int32 "wire" arrays
+(``layout.wire_words_per_lane`` words per lane) at every layout.
+
 Backend selection goes through the registry in :mod:`repro.backends`
 (capability ``"fused"``): on TPU the ``pallas-tpu`` evaluator wins by
 priority, elsewhere ``words-cpu``; ``ref-vertical`` is requestable by
-name for validation. A new evaluator (e.g. width-64 planes) is an
-additive ``register_backend`` call.
+name for validation. Backends declare the layouts they consume — the
+64-bit evaluators (``words-cpu-64``/``pallas-tpu-64``/``ref-vertical-64``)
+and the multi-device ``shard-words`` pipeline are additive
+``register_backend`` calls over the same builders.
 
 Before compilation the engine normalizes each recorded graph with
 ``optimize_program`` (common-subexpression elimination + dead-node/leaf
@@ -71,11 +81,13 @@ import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 from repro.backends import get_backend, on_tpu as _on_tpu, select_backend
 from repro.kernels import ref
 from repro.kernels.bit_transpose import bit_transpose32 as _pl_transpose
+from repro.kernels.plane_layout import LAYOUT32, PlaneLayout
 
 LANE = 128
 SUBLANE = 8
@@ -106,12 +118,15 @@ class FusedProgram:
     Value-id space: leaf inputs occupy ids ``0..n_inputs-1``; op ``i``'s
     result is id ``n_inputs + i``. ``outputs`` lists the value ids to
     materialize. Values are unsigned width-bit integers; every opcode
-    computes modulo ``2**width``.
+    computes modulo ``2**width``. ``layout`` names the lane word format
+    the pipeline evaluates in (and is part of the cache key — the same
+    op structure compiled at two layouts is two pipelines).
     """
     width: int
     n_inputs: int
     ops: tuple[FusedOp, ...]
     outputs: tuple[int, ...]  # value ids to materialize
+    layout: PlaneLayout = LAYOUT32
 
 
 def optimize_program(program: FusedProgram
@@ -184,7 +199,8 @@ def optimize_program(program: FusedProgram
             outputs.append(rv)
         out_pos.append(pos_of[rv])
     opt = FusedProgram(width=program.width, n_inputs=len(leaf_map),
-                       ops=ops, outputs=tuple(outputs))
+                       ops=ops, outputs=tuple(outputs),
+                       layout=program.layout)
     return opt, tuple(out_pos), leaf_map
 
 
@@ -266,16 +282,25 @@ def run_program_ref(program: FusedProgram, x: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------- #
 
 
-def _word_popcount(x: jax.Array) -> jax.Array:
-    """SWAR popcount on uint32 words (Hacker's Delight 5-2)."""
-    x = x - ((x >> 1) & jnp.uint32(0x55555555))
-    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
-    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
-    return (x * jnp.uint32(0x01010101)) >> 24
+def _word_popcount(x, layout: PlaneLayout = LAYOUT32, xp=jnp):
+    """SWAR popcount at the layout's word size (Hacker's Delight 5-2);
+    masks and the final shift derive from the layout, so the same code
+    serves 32- and 64-bit lanes (and NumPy or jnp arrays alike)."""
+    m1, m2, m4, h01 = (layout.word_scalar(c, xp)
+                       for c in layout.swar_consts)
+    x = x - ((x >> 1) & m1)
+    x = (x & m2) + ((x >> 2) & m2)
+    x = (x + (x >> 4)) & m4
+    return (x * h01) >> layout.popcount_shift
 
 
-def _apply_word_op(op: FusedOp, xs: list, width: int,
-                   mask: jax.Array) -> jax.Array:
+def _apply_word_op(op: FusedOp, xs: list, width: int, mask,
+                   layout: PlaneLayout, xp):
+    dt = layout.dtype_name
+
+    def trunc(v):  # modulo 2**width; free when width fills the word
+        return v if mask is None else v & mask
+
     if op.opcode == "and":
         return xs[0] & xs[1]
     if op.opcode == "or":
@@ -283,51 +308,88 @@ def _apply_word_op(op: FusedOp, xs: list, width: int,
     if op.opcode == "xor":
         return xs[0] ^ xs[1]
     if op.opcode == "add":
-        return (xs[0] + xs[1]) & mask
+        return trunc(xs[0] + xs[1])
     if op.opcode == "sub":
-        return (xs[0] - xs[1]) & mask
+        return trunc(xs[0] - xs[1])
     if op.opcode == "mul":
-        return (xs[0] * xs[1]) & mask
+        return trunc(xs[0] * xs[1])
     if op.opcode in ("div", "mod", "divmod"):
         # Unsigned NumPy semantics: x // 0 == x % 0 == 0 per lane.
+        if xp is np:
+            # NumPy integer division BY ZERO already yields 0 (the very
+            # semantics the engine exposes), so no masking passes — this
+            # is the same errstate idiom the eager dataplane uses.
+            with np.errstate(divide="ignore", invalid="ignore"):
+                if op.opcode == "div":
+                    return xs[0] // xs[1]
+                if op.opcode == "mod":
+                    return xs[0] % xs[1]
+                return (xs[0] // xs[1], xs[0] % xs[1])
+        # XLA leaves division by zero undefined: guard the lanes. One
+        # hardware division per op — the remainder derives from the
+        # quotient (x % y == x - (x // y) * y, exact for unsigned).
         zero_div = xs[1] == 0
-        safe = jnp.where(zero_div, jnp.uint32(1), xs[1])
-        zero = jnp.uint32(0)
+        safe = xp.where(zero_div, layout.word_scalar(1, xp), xs[1])
+        zero = layout.word_scalar(0, xp)
+        q = xs[0] // safe
+        if op.opcode == "div":
+            return xp.where(zero_div, zero, q)
+        r = xs[0] - q * safe
         if op.opcode == "divmod":  # tuple value, consumed by fst/snd
-            return (jnp.where(zero_div, zero, xs[0] // safe),
-                    jnp.where(zero_div, zero, xs[0] % safe))
-        out = xs[0] // safe if op.opcode == "div" else xs[0] % safe
-        return jnp.where(zero_div, zero, out)
+            return (xp.where(zero_div, zero, q),
+                    xp.where(zero_div, zero, r))
+        return xp.where(zero_div, zero, r)
     if op.opcode == "fst":
         return xs[0][0]
     if op.opcode == "snd":
         return xs[0][1]
     if op.opcode == "less":
-        return (xs[0] < xs[1]).astype(jnp.uint32)
+        return (xs[0] < xs[1]).astype(dt)
     if op.opcode == "popcount":
-        return _word_popcount(xs[0])
+        return _word_popcount(xs[0], layout, xp)
     if op.opcode == "reduce_and":
         w = op.param or width
-        if w > 32:  # mask(w) exceeds any width-bit value
-            return jnp.zeros_like(xs[0])
-        return (xs[0] == jnp.uint32((1 << w) - 1)).astype(jnp.uint32)
+        if w > layout.word_bits:  # mask(w) exceeds any width-bit value
+            return xp.zeros_like(xs[0])
+        return (xs[0] == layout.word_scalar(layout.mask(w), xp)).astype(dt)
     if op.opcode == "reduce_or":
-        return (xs[0] != 0).astype(jnp.uint32)
+        return (xs[0] != 0).astype(dt)
     if op.opcode == "reduce_xor":
-        return _word_popcount(xs[0]) & jnp.uint32(1)
+        return _word_popcount(xs[0], layout, xp) & layout.word_scalar(1, xp)
     raise KeyError(op.opcode)
 
 
 def run_program_words(program: FusedProgram, leaves: list) -> tuple:
-    """Same program, horizontal layout: leaves are flat uint32 word arrays
-    (element i = word i), returns one array per program output. Operands
-    are masked to ``width`` bits on entry — identical value semantics to
-    the vertical evaluators (everything is modulo 2**width)."""
-    mask = jnp.uint32((1 << program.width) - 1)
-    env = [x & mask for x in leaves]
-    for op in program.ops:
+    """Same program, horizontal layout: leaves are flat lane-dtype word
+    arrays (element i = word i) of the program's layout, returns one array
+    per program output. Operands are masked to ``width`` bits on entry —
+    identical value semantics to the vertical evaluators (everything is
+    modulo 2**width). Computes with whichever array module the leaves
+    belong to (jnp under jit; NumPy for the 64-bit host path, where jax
+    would need the x64 flag)."""
+    layout = program.layout
+    xp = np if isinstance(leaves[0], np.ndarray) else jnp
+    # Natural-word programs need no masking at all: every lane op wraps
+    # at the word boundary by construction.
+    mask = (None if program.width == layout.word_bits
+            else layout.word_scalar(layout.mask(program.width), xp))
+    env = list(leaves) if mask is None else [x & mask for x in leaves]
+    # Dead-value liveness: drop each intermediate after its last use so
+    # the allocator recycles warm buffers instead of holding every
+    # temporary of the whole program live (NumPy path: this is the
+    # difference between cache-resident reuse and a fresh page-faulting
+    # allocation per op; under jit the env holds tracers and XLA does its
+    # own liveness, so it is free there).
+    last_use: dict[int, int] = {v: len(program.ops) for v in program.outputs}
+    for i, op in enumerate(program.ops):
+        for a in op.args:
+            last_use[a] = max(last_use.get(a, -1), i)
+    for i, op in enumerate(program.ops):
         env.append(_apply_word_op(op, [env[a] for a in op.args],
-                                  program.width, mask))
+                                  program.width, mask, layout, xp))
+        for a in op.args:
+            if last_use[a] == i:
+                env[a] = None
     return tuple(env[v] for v in program.outputs)
 
 
@@ -382,34 +444,41 @@ def get_pipeline(program: FusedProgram, force_pallas: bool = False,
                  donate: bool = False, backend: str | None = None):
     """Compiled callable for ``program``: ``fn(*leaves) -> tuple(outs)``.
 
-    Leaves are flat [n] int32 arrays of packed horizontal words (element i
-    = word i), n a multiple of 32; outputs likewise. One jit trace end to
+    Leaves are flat int32 *wire* arrays of packed horizontal words
+    (``program.layout.wire_words_per_lane`` int32 words per lane, lane
+    count a multiple of 32); outputs likewise. One jit trace end to
     end. The evaluator is resolved through the backend registry
-    (``repro.backends``, capability ``"fused"``): on TPU the Pallas
-    vertical evaluator wins (operands bit-transpose once, the fused
-    program runs per VMEM block, outputs transpose back once); elsewhere
-    the word-domain evaluator runs. ``backend=`` names a registered
-    evaluator explicitly; ``force_pallas``/``force_vertical`` are
-    shorthands for the built-in names. With ``donate=True`` the leaf
+    (``repro.backends``, capability ``"fused"``, filtered by the
+    program's layout): on TPU the Pallas vertical evaluator wins
+    (operands bit-transpose once, the fused program runs per VMEM block,
+    outputs transpose back once); elsewhere the word-domain evaluator
+    runs. ``backend=`` names a registered evaluator explicitly;
+    ``force_pallas``/``force_vertical`` are shorthands for the built-in
+    names at the program's layout. With ``donate=True`` the leaf
     device buffers are donated to the trace (``donate_argnums``) so XLA
     may reuse them for intermediates — the engine's leaf snapshots stay on
     the host, so donation never invalidates caller-visible data. Cached
     on (program structure, backend, donate); jit handles per-shape
     specialization.
     """
+    wb = program.layout.word_bits
     if backend is None:
         if force_pallas:
-            backend = "pallas-tpu"
+            backend = "pallas-tpu" if wb == 32 else f"pallas-tpu-{wb}"
         elif force_vertical:
-            backend = "ref-vertical"
+            backend = "ref-vertical" if wb == 32 else f"ref-vertical-{wb}"
         else:
-            backend = select_backend(require="fused",
-                                     width=program.width).name
+            backend = select_backend(require="fused", width=program.width,
+                                     layout=program.layout).name
+    spec = get_backend(backend)
+    if wb not in spec.layouts:
+        raise ValueError(
+            f"backend {backend!r} does not support the {wb}-bit plane "
+            f"layout (declares {sorted(spec.layouts)})")
     # Cache on the resolved BackendSpec, not the name: re-registering a
     # name creates a new (frozen, hashable) spec, so stale pipelines
     # compiled by a replaced builder can never be served.
-    return _cached_pipeline(program, get_backend(backend), interpret,
-                            donate)
+    return _cached_pipeline(program, spec, interpret, donate)
 
 
 @functools.lru_cache(maxsize=256)  # bounded: one jit callable per structure
@@ -438,8 +507,20 @@ def _donating(fn, n_leaves: int):
 
 def build_words_pipeline(program: FusedProgram, donate: bool = False):
     """Word-domain pipeline (the CPU execution path): the bracketing
-    bit_transpose32 pair cancels algebraically, so the program fuses
-    directly on horizontal words."""
+    transpose pair cancels algebraically, so the program fuses directly
+    on horizontal words. At the 32-bit layout this is one jax.jit trace;
+    at the 64-bit layout it evaluates in NumPy (uint64 under jax needs
+    the global x64 flag, which would change dtype promotion repo-wide),
+    so ``donate`` is a no-op there — NumPy has no device buffers."""
+    layout = program.layout
+    if layout.word_bits != 32:
+        def np_word_pipeline(*leaves):
+            outs = run_program_words(
+                program, [layout.from_wire(x) for x in leaves])
+            return tuple(layout.to_wire(o) for o in outs)
+
+        return np_word_pipeline
+
     def word_pipeline(*leaves):
         outs = run_program_words(
             program,
@@ -453,11 +534,57 @@ def build_words_pipeline(program: FusedProgram, donate: bool = False):
     return jax.jit(word_pipeline)
 
 
+def build_sharded_words_pipeline(program: FusedProgram,
+                                 donate: bool = False):
+    """Multi-device word-domain pipeline (``shard-words``): the program's
+    word axis partitions across ``jax.devices()`` on a 1-D ``("words",)``
+    mesh, so ONE flush executes one program on every local device. The
+    program is elementwise across words, so the sharding is
+    communication-free — GSPMD places each shard's slice of the fused
+    elementwise DAG on its device; outputs gather on read-back.
+
+    Leaves pad to a multiple of 32 x n_devices before placement (the
+    engine slices its lane count back out of the outputs, exactly as it
+    does for the 32-lane padding). ``donate`` is ignored: donated input
+    buffers would alias the per-device shards the caller still owns.
+    """
+    from repro.distributed.sharding import words_mesh, words_sharding
+
+    if program.layout.word_bits != 32:
+        raise ValueError("shard-words shards the 32-bit word layout; "
+                         "register a 64-bit variant to widen it")
+    sharding = words_sharding(words_mesh())
+    n_dev = sharding.mesh.size
+
+    def word_pipeline(*leaves):
+        outs = run_program_words(
+            program,
+            [jax.lax.bitcast_convert_type(x, jnp.uint32)
+             for x in leaves])
+        return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
+                     for o in outs)
+
+    jitted = jax.jit(word_pipeline)
+
+    def sharded_pipeline(*leaves):
+        n = np.asarray(leaves[0]).shape[0]
+        pad = (-n) % (32 * n_dev)
+        placed = [jax.device_put(np.pad(np.asarray(x, np.int32), (0, pad)),
+                                 sharding) for x in leaves]
+        return tuple(np.asarray(o)[:n] for o in jitted(*placed))
+
+    return sharded_pipeline
+
+
 def build_vertical_pipeline(program: FusedProgram, use_pallas: bool,
                             interpret: bool = False, donate: bool = False):
     """Vertical bit-plane pipeline: transpose in once, run the fused
-    program (Pallas kernel or jnp oracle), transpose out once."""
+    program (Pallas kernel or jnp oracle), transpose out once. The
+    layout's pack/unpack maps horizontal wire words onto ``width`` bit
+    planes — a 64-bit lane is two stacked 32x32 transpose tiles, so the
+    one 32x32 transpose kernel serves every layout."""
     width = program.width
+    layout = program.layout
     if use_pallas:
         interp = interpret or not _on_tpu()
         transpose = functools.partial(_pl_transpose, interpret=interp)
@@ -467,21 +594,12 @@ def build_vertical_pipeline(program: FusedProgram, use_pallas: bool,
         transpose = ref.bit_transpose32
         run = functools.partial(run_program_ref, program)
 
-    def pack(words):  # [32g] horizontal words -> [width, g] planes
-        g = words.shape[0] // 32
-        return transpose(words.reshape(g, 32).T)[:width]
-
-    def unpack(planes):  # [width, g] planes -> [32g] horizontal words
-        g = planes.shape[1]
-        if width < 32:
-            planes = jnp.concatenate(
-                [planes, jnp.zeros((32 - width, g), planes.dtype)])
-        return transpose(planes).T.reshape(32 * g)
-
     def pipeline(*leaves):
-        stack = jnp.stack([pack(leaf) for leaf in leaves])
+        stack = jnp.stack([layout.pack_planes(leaf, transpose, width)
+                           for leaf in leaves])
         outs = run(stack)
-        return tuple(unpack(outs[t]) for t in range(outs.shape[0]))
+        return tuple(layout.unpack_planes(outs[t], transpose, width)
+                     for t in range(outs.shape[0]))
 
     if donate:
         return _donating(pipeline, program.n_inputs)

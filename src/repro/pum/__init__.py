@@ -23,6 +23,8 @@ from repro.backends import (BackendSpec, available_backends, get_backend,
                             register_backend, select_backend,
                             unregister_backend)
 from repro.core.engine import EngineStats
+from repro.kernels.plane_layout import (LAYOUT32, LAYOUT64, PlaneLayout,
+                                        get_layout)
 from repro.pum.api import (Device, PumArray, as_device, asarray,
                            default_device, device)
 from repro.pum.config import EngineConfig
@@ -32,6 +34,9 @@ __all__ = [
     "Device",
     "EngineConfig",
     "EngineStats",
+    "LAYOUT32",
+    "LAYOUT64",
+    "PlaneLayout",
     "PumArray",
     "as_device",
     "asarray",
@@ -39,6 +44,7 @@ __all__ = [
     "default_device",
     "device",
     "get_backend",
+    "get_layout",
     "register_backend",
     "select_backend",
     "unregister_backend",

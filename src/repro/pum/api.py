@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.engine import LazyArray
 from repro.pum.config import EngineConfig
 
 # Innermost active `with device(...)` last; module default built lazily.
@@ -57,14 +58,16 @@ class Device:
         # word dataplane to fuse over).
         if config.backend == "sim" and config.fuse:
             config = config.replace(fuse=False)
-        # Likewise when no registered fused evaluator covers this width
-        # (the fused leaf packing is 32-bit): fall back to per-op eager
-        # execution instead of refusing to build — EngineConfig-valid
-        # widths up to 64 always yield a working device.
-        if config.fuse:
+        # Likewise when NO registered fused evaluator supports this
+        # width/layout pair (a pinned fused_backend that covers it takes
+        # precedence): fall back to per-op eager execution instead of
+        # refusing to build — EngineConfig-valid widths up to 64 always
+        # yield a working device.
+        if config.fuse and config.fused_backend is None:
             from repro.backends import select_backend
             try:
-                select_backend(require="fused", width=config.width)
+                select_backend(require="fused", width=config.width,
+                               layout=config.resolved_layout())
             except LookupError:
                 config = config.replace(fuse=False)
         self.config = config
@@ -78,7 +81,9 @@ class Device:
                 controller=config.controller, seed=config.seed,
                 fuse=config.fuse, flush_threshold=config.flush_threshold,
                 flush_memory_bytes=config.flush_memory_bytes,
-                donate_leaves=config.donate_leaves)
+                donate_leaves=config.donate_leaves, layout=config.layout,
+                fused_backend=config.fused_backend,
+                ref_postponing=config.ref_postponing)
         self.engine = _engine
         self._scalars: dict[tuple, np.ndarray] = {}
 
@@ -123,6 +128,12 @@ class Device:
     @property
     def width(self) -> int:
         return self.engine.width
+
+    @property
+    def layout(self):
+        """The engine's :class:`~repro.kernels.plane_layout.PlaneLayout`
+        (the lane word format fused programs compile against)."""
+        return self.engine.layout
 
     def charge(self, kind: str, n_elems: int, width: int | None = None,
                n_planes: int | None = None) -> None:
@@ -207,6 +218,23 @@ class PumArray:
         if not self.shape:
             raise TypeError("len() of unsized PumArray")
         return self.shape[0]
+
+    def __getitem__(self, idx) -> "PumArray":
+        """Basic (NumPy-style) indexing along the lane axes.
+
+        Eager values slice to **views** (no copy, no charge — the lanes
+        were already materialized); a pending fused-graph handle forces a
+        materialize first (one flush), then slices: a slice is a host
+        access pattern, not a dataplane op, so it cannot extend the
+        recorded program. Integer indexing yields a 0-d PumArray (use
+        ``int(x[i])`` / ``to_numpy()`` for a Python scalar)."""
+        data = self._data
+        if isinstance(data, LazyArray):
+            data = data.materialize()
+        out = data[idx]
+        if not isinstance(out, np.ndarray):  # 0-d from integer indexing
+            out = np.asarray(out, np.uint64)
+        return PumArray(self._device, out)
 
     def __repr__(self) -> str:
         pending = getattr(self._data, "_value", self._data) is None
@@ -408,6 +436,8 @@ def as_device(obj) -> Device:
             chained=obj.chained, controller=obj.controller, seed=obj.seed,
             fuse=obj.fuse, flush_threshold=obj.flush_threshold,
             flush_memory_bytes=obj.flush_memory_bytes,
-            donate_leaves=obj.donate_leaves, success_db=obj.db)
+            donate_leaves=obj.donate_leaves, success_db=obj.db,
+            layout=obj.layout, fused_backend=obj.fused_backend,
+            ref_postponing=obj.ref_postponing)
         return Device(cfg, _engine=obj)
     raise TypeError(f"cannot interpret {type(obj).__name__} as a Device")

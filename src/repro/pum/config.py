@@ -29,8 +29,19 @@ class EngineConfig:
       ``repro.backends`` registry: ``"fast"`` (packed NumPy words) or
       ``"sim"`` (bit-exact chip model; implies ``fuse=False``), or any
       registered name with the ``"eager"`` capability.
+    * ``layout`` — plane-layout word bits of the fused dataplane (32 or
+      64, or a ``repro.kernels.plane_layout.PlaneLayout``). ``None``
+      derives the narrowest canonical layout holding ``width`` (32-bit
+      up to width 32, 64-bit above); pass 64 explicitly to run narrow
+      values on 64-bit lanes (e.g. to keep raw uint64 bitmaps unsplit).
+    * ``fused_backend`` — pin a registered fused evaluator by name (e.g.
+      ``"shard-words"``, the multi-device word-axis pipeline); ``None``
+      lets the capability lookup pick the best available one.
     * ``controller`` — ``None`` (closed-form bank divide), ``"auto"``
       (build a ``MemoryController``), or a controller instance.
+    * ``ref_postponing`` — REF commands batched per rank lockout by the
+      ``"auto"`` controller's refresher (1..8; JEDEC allows postponing up
+      to 8): longer but rarer refresh windows, priced by ``batch_cost``.
     * ``donate_leaves`` — donate leaf device buffers to the fused trace
       (``jax.jit(..., donate_argnums=...)``): XLA may reuse them for
       intermediates, cutting pipeline peak memory. Results are
@@ -53,12 +64,30 @@ class EngineConfig:
     flush_memory_bytes: int | None = 1 << 30
     donate_leaves: bool = False
     success_db: Any = None
+    layout: Any = None
+    fused_backend: str | None = None
+    ref_postponing: int = 1
 
     def __post_init__(self):
         if not 1 <= self.width <= 64:
             raise ValueError(f"width must be in [1, 64], got {self.width}")
         if self.flush_threshold is not None and self.flush_threshold < 1:
             raise ValueError("flush_threshold must be >= 1 or None")
+        if not 1 <= self.ref_postponing <= 8:
+            raise ValueError("ref_postponing must be in [1, 8] (JEDEC "
+                             "allows postponing up to 8 REFs)")
+        if self.resolved_layout().word_bits < self.width:
+            raise ValueError(
+                f"width {self.width} does not fit the "
+                f"{self.resolved_layout().word_bits}-bit plane layout")
+
+    def resolved_layout(self):
+        """The :class:`~repro.kernels.plane_layout.PlaneLayout` this
+        config runs on (``layout`` resolved, or derived from ``width``)."""
+        from repro.kernels.plane_layout import get_layout, layout_for_width
+        if self.layout is None:
+            return layout_for_width(self.width)
+        return get_layout(self.layout)
 
     def replace(self, **changes) -> "EngineConfig":
         """A copy with ``changes`` applied (``dataclasses.replace``)."""

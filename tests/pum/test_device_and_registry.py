@@ -59,20 +59,48 @@ def test_device_builds_engine_from_config():
     assert dev2.config.width == 32 and dev2.config.mfr == "H"
 
 
-def test_wide_device_falls_back_to_eager():
-    """EngineConfig-valid widths above the fused leaf packing's 32 bits
-    must still yield a working device: fuse downgrades to eager (the
-    same transparent fallback backend='sim' gets)."""
+def test_wide_device_fuses_on_the_64bit_layout():
+    """Widths above 32 resolve to the 64-bit plane layout and FUSE (the
+    additively registered ``words-cpu-64`` evaluator), bit-exact against
+    eager — the old transparent eager fallback is gone because a fused
+    evaluator now covers the layout."""
     dev = pum.device(width=48)
-    assert not dev.config.fuse
+    assert dev.config.fuse and dev.layout.word_bits == 64
     a = np.array([1 << 40, 5], np.uint64)
     np.testing.assert_array_equal(np.asarray(dev.asarray(a) + a), 2 * a)
     q, r = divmod(dev.asarray(a), np.array([3, 0], np.uint64))
     np.testing.assert_array_equal(np.asarray(q),
                                   np.array([(1 << 40) // 3, 0], np.uint64))
-    # the direct engine path still refuses loudly (no silent truncation)
-    with pytest.raises(ValueError, match="32-bit leaf packing"):
-        PulsarEngine(width=48, fuse=True)
+    # widths that fit no layout word still refuse loudly
+    with pytest.raises(ValueError, match="does not fit"):
+        PulsarEngine(width=48, layout=32)
+
+
+def test_device_falls_back_to_eager_without_a_layout_evaluator():
+    """When NO registered fused evaluator supports the device's layout,
+    fuse transparently downgrades to eager (the pre-width-64 behavior,
+    now reachable only by unregistering the 64-bit evaluators)."""
+    saved = {n: pum.get_backend(n)
+             for n in ("words-cpu-64", "pallas-tpu-64", "ref-vertical-64")}
+    for n in saved:
+        pum.unregister_backend(n)
+    try:
+        with pytest.raises(LookupError, match="64-bit plane layout"):
+            pum.select_backend(require="fused", width=48, layout=64)
+        dev = pum.device(width=48)
+        assert not dev.config.fuse
+        a = np.array([1 << 40, 5], np.uint64)
+        np.testing.assert_array_equal(np.asarray(dev.asarray(a) + a),
+                                      2 * a)
+        # the direct engine path still refuses loudly
+        with pytest.raises(ValueError, match="no registered fused"):
+            PulsarEngine(width=48, fuse=True)
+    finally:
+        for n, s in saved.items():
+            pum.register_backend(
+                n, s.builder, capabilities=s.capabilities,
+                max_width=s.max_width, priority=s.priority,
+                available=s.available, layouts=s.layouts)
 
 
 def test_sim_backend_device_is_eager_and_bit_exact():
@@ -157,13 +185,17 @@ def test_registry_lists_builtin_backends():
 
 
 def test_select_backend_capability_lookup():
-    # On this host the word-domain evaluator wins (Pallas needs a TPU).
-    spec = pum.select_backend(require="fused", width=32)
-    assert spec.name in ("words-cpu", "pallas-tpu")
+    # On this host the word-domain evaluator wins (Pallas needs a TPU;
+    # shard-words needs >1 device).
+    spec = pum.select_backend(require="fused", width=32, layout=32)
+    assert spec.name in ("words-cpu", "pallas-tpu", "shard-words")
+    # width 64 resolves to an evaluator declaring the 64-bit layout
+    spec64 = pum.select_backend(require="fused", width=64)
+    assert spec64.layouts == frozenset({64})
     with pytest.raises(LookupError):
         pum.select_backend(require="no-such-capability")
-    with pytest.raises(LookupError):  # nothing fused covers width 64 yet
-        pum.select_backend(require="fused", width=64)
+    with pytest.raises(LookupError):  # layout filter: sharded is 32-only
+        pum.select_backend(require="sharded", layout=64)
     with pytest.raises(KeyError, match="unknown backend"):
         pum.get_backend("nope")
 

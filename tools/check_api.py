@@ -21,16 +21,17 @@ import sys
 # operator set IS the API.
 EXPECTED = {
     "repro.pum": [
-        "BackendSpec", "Device", "EngineConfig", "EngineStats", "PumArray",
+        "BackendSpec", "Device", "EngineConfig", "EngineStats", "LAYOUT32",
+        "LAYOUT64", "PlaneLayout", "PumArray",
         "as_device", "asarray", "available_backends", "default_device",
-        "device", "get_backend", "register_backend", "select_backend",
-        "unregister_backend",
+        "device", "get_backend", "get_layout", "register_backend",
+        "select_backend", "unregister_backend",
     ],
     "PumArray": [
         "__add__", "__and__", "__array__", "__array_priority__",
         "__array_ufunc__", "__bool__", "__divmod__", "__eq__",
-        "__floordiv__", "__ge__", "__gt__", "__hash__", "__init__",
-        "__le__", "__len__",
+        "__floordiv__", "__ge__", "__getitem__", "__gt__", "__hash__",
+        "__init__", "__le__", "__len__",
         "__lt__", "__mod__", "__mul__", "__ne__", "__or__", "__radd__",
         "__rand__", "__rdivmod__", "__repr__", "__rfloordiv__", "__rmod__",
         "__rmul__", "__ror__", "__rsub__", "__rxor__", "__sub__",
@@ -39,16 +40,20 @@ EXPECTED = {
     ],
     "Device": [
         "__enter__", "__exit__", "__init__", "__repr__", "asarray",
-        "charge", "flush", "latency_ms", "reset_stats", "stats", "width",
+        "charge", "flush", "latency_ms", "layout", "reset_stats", "stats",
+        "width",
     ],
     "EngineConfig": [
         "backend", "banks", "chained", "controller", "donate_leaves",
-        "flush_memory_bytes", "flush_threshold", "fuse", "mfr", "row_bits",
+        "flush_memory_bytes", "flush_threshold", "fuse", "fused_backend",
+        "layout", "mfr", "ref_postponing", "row_bits",
         "seed", "success_db", "use_pulsar", "width",
     ],
     # Built-in registrations (a superset is allowed: registering more
     # backends is the designed extension point).
-    "backends": ["fast", "pallas-tpu", "ref-vertical", "sim", "words-cpu"],
+    "backends": ["fast", "pallas-tpu", "pallas-tpu-64", "ref-vertical",
+                 "ref-vertical-64", "shard-words", "sim", "words-cpu",
+                 "words-cpu-64"],
 }
 
 _SKIP = {"__module__", "__qualname__", "__doc__", "__slots__", "__dict__",
