@@ -17,7 +17,7 @@ steady-state refresh factor shifts while the raw makespan is untouched.
 
 from __future__ import annotations
 
-from benchmarks.common import Row, row, timed_us
+from benchmarks.common import Row, record_counters, row, timed_us
 from repro.controller import MemoryController, retarget_program
 from repro.core import commands as cmds
 from repro.core.cost_model import CostModel
@@ -55,6 +55,9 @@ def run() -> list[Row]:
             f"speedup_vs_seq={seq_ns / tr.total_ns:.2f}x "
             f"refreshes={tr.n_refreshes} "
             f"refresh_stall={tr.refresh_stall_ns:.0f}ns"))
+        # Post-hoc derived controller counters ride along in the BENCH
+        # baseline (bus utilization, row hits, tRRD/tFAW stalls).
+        record_counters(f"bankpar.ctrl_b{banks}", tr.counters())
 
     # REF postponing sweep: batch_cost prices the same 16-bank MAJ unit
     # under each policy — refresh_factor is the steady-state slowdown the

@@ -1,13 +1,49 @@
 """Shared benchmark plumbing: every benchmark module exposes
 ``run() -> list[(name, us_per_call, derived)]`` rows; run.py aggregates into
-the required ``name,us_per_call,derived`` CSV."""
+the required ``name,us_per_call,derived`` CSV.
+
+Recorded trajectory: run.py's ``--emit-dir`` writes the row set of the
+gated modules as ``BENCH_*.json`` (schema below) so the repo carries a
+committed perf baseline and ``tools/bench_compare.py`` can diff a fresh
+run against it in CI. Benchmark modules attach telemetry counters to
+individual rows via :func:`record_counters`; the emitter folds them in.
+
+BENCH_*.json schema (``"schema": 1``)::
+
+    {
+      "schema": 1,
+      "bench": "kernel_bench",            # source module
+      "git_sha": "<12 hex>|unknown",
+      "host": {"platform": ..., "machine": ..., "python": ...,
+               "cpu_count": ...},
+      "rows": {
+        "<row name>": {
+          "ns_per_call": <float>,          # best-of-repeat wall ns
+          "derived": "<free-form metrics string>",
+          "counters": {...}                # optional telemetry snapshot
+        }, ...
+      }
+    }
+
+``ns_per_call`` is host wall time (nanoseconds, explicit unit in the key);
+model-domain latencies live inside ``derived``/``counters`` with their own
+unit-suffixed names.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import platform
+import subprocess
 import time
 from typing import Callable
 
 Row = tuple[str, float, str]
+
+# Row-name -> counter snapshot, registered by benchmark modules while they
+# run and folded into the next emit (cleared per module by run.py).
+_COUNTERS: dict[str, dict] = {}
 
 
 def timed_us(fn: Callable, *args, repeat: int = 3, **kw) -> tuple[float, object]:
@@ -21,3 +57,70 @@ def timed_us(fn: Callable, *args, repeat: int = 3, **kw) -> tuple[float, object]
 
 def row(name: str, us: float, derived: str) -> Row:
     return (name, round(us, 2), derived)
+
+
+def record_counters(row_name: str, counters) -> None:
+    """Attach a telemetry snapshot to ``row_name`` for the next BENCH
+    emit. ``counters`` is a ``repro.telemetry.CounterBank`` (snapshotted
+    via ``as_dict()``) or an already-plain dict."""
+    _COUNTERS[row_name] = (counters.as_dict()
+                           if hasattr(counters, "as_dict") else
+                           dict(counters))
+
+
+def drain_counters() -> dict[str, dict]:
+    """Pop all registered row counters (run.py calls this per module so
+    one module's counters never leak into another's emit)."""
+    out = dict(_COUNTERS)
+    _COUNTERS.clear()
+    return out
+
+
+def git_sha() -> str:
+    """Short commit SHA of the working tree, ``"unknown"`` outside git."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short=12", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def host_fingerprint() -> dict:
+    """Coarse host identity stored with each baseline: bench_compare
+    loosens thresholds when baseline and fresh run came from different
+    hosts (wall-time rows are host-dependent)."""
+    return {
+        "platform": platform.system(),
+        "machine": platform.machine(),
+        "python": platform.python_version(),
+        "cpu_count": os.cpu_count() or 0,
+    }
+
+
+def emit_bench_json(bench: str, rows: list[Row], path: str,
+                    counters: dict[str, dict] | None = None) -> str:
+    """Write ``rows`` (plus any per-row ``counters``) as a BENCH_*.json
+    baseline at ``path``; returns ``path``."""
+    counters = drain_counters() if counters is None else counters
+    doc = {
+        "schema": 1,
+        "bench": bench,
+        "git_sha": git_sha(),
+        "host": host_fingerprint(),
+        "rows": {
+            name: {
+                "ns_per_call": us * 1e3,
+                "derived": derived,
+                **({"counters": counters[name]} if name in counters
+                   else {}),
+            }
+            for name, us, derived in rows
+        },
+    }
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

@@ -8,6 +8,12 @@ steady-state refresh factor), not the closed-form bank divide.
 Paper: 2.21x (Mfr M) / 1.46x (Mfr H) average speedup; our conservative
 per-op staging model reproduces the structure (M > H, logic > arithmetic,
 MAJ9 degradation) with smaller magnitudes — analysed in EXPERIMENTS.md.
+
+Units: the CSV's ``us_per_call`` column is *host* wall time of the
+pricing pass (as in every benchmark module); the model-domain DRAM
+latencies live in ``derived`` with explicit ``ns`` suffixes
+(``pulsar=..ns frac=..ns``, success-rate-adjusted amortized per-row
+latency from ``op_effective_ns``) alongside the dimensionless speedups.
 """
 
 from __future__ import annotations
@@ -47,17 +53,22 @@ def run() -> list[Row]:
                 l_c, sr_c, _, _ = chained.op_effective_ns(kind, 32, planes)
                 l_f, sr_f, _, _ = frac.op_effective_ns(kind, 32, planes)
                 eff_f = l_f / sr_f
-                speeds[name] = (eff_f / (l_p / sr_p),
-                                eff_f / (l_c / sr_c), m, n)
+                eff_p = l_p / sr_p
+                speeds[name] = (eff_f / eff_p, eff_f / (l_c / sr_c),
+                                m, n, eff_p, eff_f)
             return speeds
 
         us, sp = timed_us(bench, repeat=1)
-        for name, (s, sc, m, n) in sp.items():
+        for name, (s, sc, m, n, eff_p, eff_f) in sp.items():
+            # Dimensionless speedups + the model-domain latencies behind
+            # them, each with its unit spelled out (the us_per_call
+            # column is host wall time of the pricing pass, NOT ns).
             rows.append(row(f"fig17.{name}_{mfr}", us / 7,
                             f"speedup={s:.2f}x chained={sc:.2f}x "
+                            f"pulsar={eff_p:.1f}ns frac={eff_f:.1f}ns "
                             f"cfg=MAJ{m}@N{n}"))
-        avg = float(np.mean([s for s, _, _, _ in sp.values()]))
-        avg_c = float(np.mean([sc for _, sc, _, _ in sp.values()]))
+        avg = float(np.mean([s for s, *_ in sp.values()]))
+        avg_c = float(np.mean([sc for _, sc, *_ in sp.values()]))
         # Controller-derived bank scaling of the PULSAR add config: how much
         # of the 16-bank ideal survives tFAW/tRRD + refresh.
         b = pulsar._batch_for("add", *pulsar._cfg_for("add", 32, None)[:2])

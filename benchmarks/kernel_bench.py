@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.pum as pum
-from benchmarks.common import Row, row, timed_us
+from benchmarks.common import Row, record_counters, row, timed_us
 from repro.core import realworld
 from repro.kernels import ref
 
@@ -64,8 +64,17 @@ def _bench_fused_vs_eager() -> list[Row]:
     got = run_fused()  # warm-up: compiles the pipeline once
     ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
 
-    us_e, _ = timed_us(run_eager)
-    us_f, _ = timed_us(run_fused)
+    # The full-plane runs are bandwidth-bound and noisy; extra repeats
+    # let the best-of-N minimum converge so the BENCH perf gate is
+    # stable run-to-run.
+    us_e, _ = timed_us(run_eager, repeat=7)
+    us_f, _ = timed_us(run_fused, repeat=7)
+    # One traced run attaches the engine's flush/pipeline-cache counters
+    # to the fused row in the BENCH baseline (tracing is out of the
+    # timed loop, so the recorded wall time stays untraced).
+    with pum.profile(fused):
+        run_fused()
+    record_counters("engine.fused_prog16", fused.counters)
     rows = [
         row("engine.eager_prog16", us_e,
             f"{16 * n / us_e:.0f} M ops*elem/s (per-op dispatch, "
@@ -119,8 +128,11 @@ def _bench_fused_mul() -> list[Row]:
 
     want, got = run_eager(), run_fused()  # warm-up compiles the pipeline
     ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
-    us_e, _ = timed_us(run_eager)
-    us_f, _ = timed_us(run_fused)
+    # The full-plane runs are bandwidth-bound and noisy; extra repeats
+    # let the best-of-N minimum converge so the BENCH perf gate is
+    # stable run-to-run.
+    us_e, _ = timed_us(run_eager, repeat=7)
+    us_f, _ = timed_us(run_fused, repeat=7)
     return [
         row("engine.eager_mul16", us_e,
             f"{16 * n / us_e:.0f} M ops*elem/s (per-op dispatch, "
@@ -152,8 +164,11 @@ def _bench_fused_mul64() -> list[Row]:
 
     want, got = run_eager(), run_fused()  # warm-up builds the pipeline
     ok = bool(np.array_equal(want, got)) and eager.stats == fused.stats
-    us_e, _ = timed_us(run_eager)
-    us_f, _ = timed_us(run_fused)
+    # The full-plane runs are bandwidth-bound and noisy; extra repeats
+    # let the best-of-N minimum converge so the BENCH perf gate is
+    # stable run-to-run.
+    us_e, _ = timed_us(run_eager, repeat=7)
+    us_f, _ = timed_us(run_fused, repeat=7)
     return [
         row("engine.eager_mul64", us_e,
             f"{16 * n / us_e:.0f} M ops*elem/s (per-op dispatch, "

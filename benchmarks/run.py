@@ -1,16 +1,30 @@
 """Benchmark aggregator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig17]
+  PYTHONPATH=src python -m benchmarks.run [--only fig17] [--emit-dir DIR]
 
 Prints ``name,us_per_call,derived`` CSV (one row per measurement).
+``--emit-dir`` additionally writes the gated modules' rows as
+``BENCH_*.json`` baselines (see benchmarks/common.py for the schema;
+``tools/bench_compare.py`` diffs a fresh emit against the committed
+copies at the repo root).
 """
 
 from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
 import traceback
+
+from benchmarks import common
+
+# Modules with a recorded perf trajectory: their rows emit to these
+# baseline files under --emit-dir (committed copies live at repo root).
+BENCH_NAMES = {
+    "kernel_bench": "BENCH_kernel.json",
+    "bank_parallelism": "BENCH_bankpar.json",
+}
 
 MODULES = [
     "fig03_fracdram_success",
@@ -33,7 +47,12 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--emit-dir", default=None, metavar="DIR",
+                    help="write BENCH_*.json baselines for the gated "
+                         "modules into DIR")
     args = ap.parse_args()
+    if args.emit_dir:
+        os.makedirs(args.emit_dir, exist_ok=True)
     print("name,us_per_call,derived")
     failed = []
     for name in MODULES:
@@ -41,10 +60,19 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(f"benchmarks.{name}")
-            for bname, us, derived in mod.run():
+            rows = mod.run()
+            for bname, us, derived in rows:
                 print(f"{bname},{us},\"{derived}\"", flush=True)
+            if args.emit_dir and name in BENCH_NAMES:
+                path = common.emit_bench_json(
+                    name, rows, os.path.join(args.emit_dir,
+                                             BENCH_NAMES[name]))
+                print(f"# wrote {path}", file=sys.stderr)
+            else:
+                common.drain_counters()  # never leak across modules
         except Exception:  # noqa: BLE001 — keep the suite running
             failed.append(name)
+            common.drain_counters()
             print(f"{name},-1,\"FAILED: "
                   f"{traceback.format_exc().splitlines()[-1]}\"", flush=True)
     if failed:

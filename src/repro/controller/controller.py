@@ -39,6 +39,9 @@ class ControllerTrace(ScheduleResult):
     refresh_stall_ns: float = 0.0
     refresh_windows: list = dataclasses.field(default_factory=list)
     per_bank_ns: dict = dataclasses.field(default_factory=dict)
+    # The timing set the schedule ran under, so ``.counters()`` derives
+    # bus-utilization/stall numbers against the right clock.
+    timings: DramTimings | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +138,8 @@ class MemoryController:
             issue_times=[t for _, t in r.events],
             cmds=[c for c, _ in r.events],
             n_refreshes=r.n_refreshes, refresh_stall_ns=r.refresh_stall_ns,
-            refresh_windows=r.refresh_windows, per_bank_ns=r.per_bank_last)
+            refresh_windows=r.refresh_windows, per_bank_ns=r.per_bank_last,
+            timings=self.t)
 
     def schedule_batch(self, unit_programs, banks: int,
                        n_batches: int = 1, refresh: bool | None = None

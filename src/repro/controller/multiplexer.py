@@ -40,10 +40,20 @@ class MuxResult:
     n_refreshes: int
     refresh_stall_ns: float
     per_bank_last: dict[int, float]
+    # Timing set the arbitration ran under (for ``.counters()`` derivation).
+    timings: DramTimings | None = None
 
     @property
     def total_ns(self) -> float:
         return self.events[-1][1] if self.events else 0.0
+
+    def counters(self, timings: DramTimings | None = None):
+        """Derive a :class:`repro.telemetry.CounterBank` from this trace
+        (commands per type, bus utilization, row hit/miss/conflict,
+        tRRD/tFAW stall time, refresh lockout). Pure post-hoc replay of
+        ``events`` — the arbitration itself stays byte-identical."""
+        from repro.telemetry import derive_controller_counters
+        return derive_controller_counters(self, timings)
 
 
 class CommandMultiplexer:
@@ -146,4 +156,4 @@ class CommandMultiplexer:
                          refresh_windows=list(ref.windows) if ref else [],
                          n_refreshes=ref.n_refreshes if ref else 0,
                          refresh_stall_ns=refresh_stall,
-                         per_bank_last=per_bank)
+                         per_bank_last=per_bank, timings=t)

@@ -68,6 +68,7 @@ multi-device ``"shard-words"`` pipeline).
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 import weakref
 
@@ -78,10 +79,12 @@ from repro.core.charact import SuccessRateDb, default_db
 from repro.core.cost_model import CostModel, OpCost, ZERO
 from repro.core.geometry import PAPER_MODULE
 from repro.core.profiles import PROFILES
+from repro.kernels import fused_program as _fused
 from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
                                          optimize_program)
 from repro.kernels.plane_layout import (PlaneLayout, get_layout,
                                         layout_for_width)
+from repro.telemetry import NULL_TRACER, CounterBank
 
 
 def _warn_deprecated(method: str, replacement: str) -> None:
@@ -110,6 +113,26 @@ class EngineStats:
     n_sequences: int = 0
     lane_efficiency: float = 1.0  # min success rate over ops used
     refresh_stall_ns: float = 0.0  # controller-modeled REF interference
+
+    def as_dict(self) -> dict:
+        """Plain-JSON snapshot with explicit units in the key names — the
+        same schema telemetry JSON (``BENCH_*.json``) embeds."""
+        return {
+            "latency_ns": self.latency_ns,
+            "energy_j": self.energy_j,
+            "n_sequences": self.n_sequences,
+            "lane_efficiency": self.lane_efficiency,
+            "refresh_stall_ns": self.refresh_stall_ns,
+        }
+
+    def __repr__(self) -> str:
+        # Defined in the body so @dataclass keeps it (units explicit:
+        # the raw ns/J floats render unreadably at DRAM scales).
+        return (f"EngineStats(latency={self.latency_ns:,.1f} ns, "
+                f"energy={self.energy_j * 1e6:,.3f} uJ, "
+                f"sequences={self.n_sequences:,}, "
+                f"lane_efficiency={self.lane_efficiency:.4f}, "
+                f"refresh_stall={self.refresh_stall_ns:,.1f} ns)")
 
     def charge(self, cost: OpCost, n_vec_rows: int, banks: int,
                success: float, batch=None) -> None:
@@ -237,6 +260,9 @@ class _OpGraph:
         self._fp_idx = np.linspace(0, n - 1, min(n, 257)).astype(np.int64)
         self.ops: list[tuple[str, tuple, int]] = []  # (opcode, args, param)
         self.results: list = []         # weakref per op
+        # perf_counter_ns at first recorded op — set only when a tracer is
+        # attached, so flush() can emit the "flush.record" span.
+        self.t_start: int | None = None
 
     def leaf_id(self, arr: np.ndarray) -> tuple[str, int]:
         """Register an operand, snapshotting its content (mod the layout
@@ -442,6 +468,12 @@ class PulsarEngine:
         self.flush_memory_bytes = flush_memory_bytes
         self.donate_leaves = donate_leaves
         self._graph: _OpGraph | None = None
+        # Telemetry: counters always exist (cheap dict, written only while
+        # a tracer is attached); ``tracer`` is None until someone opts in
+        # (pum.profile(), ServeEngine(telemetry=True)) — the disabled path
+        # is a single `is None` check per flush, nothing per op.
+        self.counters = CounterBank()
+        self.tracer = None
 
     # ------------------------------------------------------------------ #
     # Cost plumbing
@@ -652,12 +684,19 @@ class PulsarEngine:
         n = operands[0].size * lanes_per_word  # dataplane lanes
         g = self._graph
         if g is not None and (g.n != n or g.raw != raw):
+            if self.tracer is not None:
+                self.counters.inc("engine.autoflush.mode_boundary")
             self.flush()  # one program = one lane count and one mode
             g = None
         if g is None:
             g = self._graph = _OpGraph(
                 n, self.layout.word_bits if raw else self.width,
                 self.layout, raw=raw)
+            if self.tracer is not None:
+                g.t_start = time.perf_counter_ns()
+        if self.tracer is not None:
+            self.counters.inc("engine.ops_recorded")
+            self.counters.inc(f"engine.op.{opcode}")
         args = []
         for x in operands:
             if isinstance(x, LazyArray) and x._value is None \
@@ -671,22 +710,29 @@ class PulsarEngine:
                 args.append(g.leaf_id(arr))
         out = LazyArray(self, g, len(g.ops), shape)
         g.add_op(opcode, tuple(args), param, out, internal=internal)
-        if not defer_flush and self._graph_over_threshold(g):
-            self.flush()  # auto-flush: `out` is live, so it materializes
+        if not defer_flush:
+            reason = self._graph_over_threshold(g)
+            if reason:
+                if self.tracer is not None:
+                    self.counters.inc(f"engine.autoflush.{reason}")
+                self.flush()  # auto-flush: `out` is live, materializes
         return out
 
-    def _graph_over_threshold(self, g: _OpGraph) -> bool:
+    def _graph_over_threshold(self, g: _OpGraph) -> str | None:
         """Auto-flush policy: graph-size (recorded ops) and estimated
         memory (one layout word per lane per held value: leaf snapshots
-        plus the pipeline's per-op intermediates)."""
+        plus the pipeline's per-op intermediates). Returns the trigger
+        name ("ops"/"memory", doubling as the telemetry counter suffix)
+        or None when the graph may keep growing."""
         if self.flush_threshold is not None \
                 and len(g.ops) >= self.flush_threshold:
-            return True
+            return "ops"
         if self.flush_memory_bytes is not None:
             est = g.layout.nbytes_per_word * g.n \
                 * (len(g.leaves) + len(g.ops))
-            return est >= self.flush_memory_bytes
-        return False
+            if est >= self.flush_memory_bytes:
+                return "memory"
+        return None
 
     def flush(self) -> None:
         """Materialize the pending op graph through the fused bit-plane
@@ -699,6 +745,13 @@ class PulsarEngine:
         g, self._graph = self._graph, None
         if g is None or not g.ops:
             return
+        tr = NULL_TRACER if self.tracer is None else self.tracer
+        if g.t_start is not None:
+            # The record phase ran between first op and now; stamp it as a
+            # span from the graph's own start time.
+            tr.add_span("flush.record", g.t_start, time.perf_counter_ns(),
+                        n_ops=len(g.ops), n_leaves=len(g.leaves),
+                        raw=g.raw)
         live = [wr() for wr in g.results]
         # Materialize ops whose handle is still referenced; handles that
         # died unreferenced are dead code (their cost was still charged,
@@ -711,42 +764,61 @@ class PulsarEngine:
         def vid(tag):  # combined id space: leaves first, then ops
             return tag[1] if tag[0] == "leaf" else n_leaves + tag[1]
 
-        program = FusedProgram(
-            width=g.width, n_inputs=n_leaves,
-            ops=tuple(FusedOp(opcode, tuple(vid(a) for a in args), param)
-                      for opcode, args, param in g.ops),
-            outputs=tuple(n_leaves + i for i in out_idx),
-            layout=g.layout)
-        program, out_pos, leaf_map = optimize_program(program)
-        pad = (-g.n) % 32  # every pipeline tiles lanes in groups of 32
-        leaves = []
-        for li in leaf_map:  # layout-dtype snapshots (_OpGraph.leaf_id)
-            flat = g.leaves[li]
-            if pad:
-                flat = np.pad(flat, (0, pad))
-            leaves.append(g.layout.to_wire(flat))
+        with tr.span("flush.optimize", n_ops_in=len(g.ops)) as sp_opt:
+            program = FusedProgram(
+                width=g.width, n_inputs=n_leaves,
+                ops=tuple(FusedOp(opcode, tuple(vid(a) for a in args),
+                                  param)
+                          for opcode, args, param in g.ops),
+                outputs=tuple(n_leaves + i for i in out_idx),
+                layout=g.layout)
+            program, out_pos, leaf_map = optimize_program(program)
+            sp_opt.args["n_ops_out"] = len(program.ops)
+        with tr.span("flush.leaf_upload", n_leaves=len(leaf_map)):
+            pad = (-g.n) % 32  # every pipeline tiles lanes in groups of 32
+            leaves = []
+            for li in leaf_map:  # layout-dtype snapshots (leaf_id)
+                flat = g.leaves[li]
+                if pad:
+                    flat = np.pad(flat, (0, pad))
+                leaves.append(g.layout.to_wire(flat))
         try:
-            outs = get_pipeline(program, donate=self.donate_leaves,
-                                backend=self.fused_backend)(*leaves)
+            with tr.span("flush.compile") as sp_c:
+                if self.tracer is not None:
+                    misses0 = _fused._cached_pipeline.cache_info().misses
+                pipeline = get_pipeline(program, donate=self.donate_leaves,
+                                        backend=self.fused_backend)
+                if self.tracer is not None:
+                    hit = (_fused._cached_pipeline.cache_info().misses
+                           == misses0)
+                    self.counters.inc("engine.pipeline_cache.hit" if hit
+                                      else "engine.pipeline_cache.miss")
+                    sp_c.args["cache"] = "hit" if hit else "miss"
+            with tr.span("flush.dispatch", n_ops=len(program.ops),
+                         n_lanes=g.n):
+                outs = pipeline(*leaves)
         except BaseException:
             # Keep pending handles recoverable after a transient failure
             # (interrupt, backend OOM): restore the graph so a later
             # flush/materialize can retry instead of orphaning them.
             self._graph = g
             raise
-        for i, pos in zip(out_idx, out_pos):
-            lz = live[i]
-            lanes = g.layout.from_wire(outs[pos])[:g.n]
-            if g.raw:  # re-join the lanes of each caller uint64 word
-                val = g.layout.join_raw(lanes)
-            else:
-                val = lanes.astype(np.uint64)
-            lz._value = val.reshape(lz.shape)
-            # A materialized handle never needs the graph again — drop the
-            # references so surviving handles don't pin the leaf snapshots
-            # (or the engine) for their lifetime.
-            lz._graph = None
-            lz._engine = None
+        with tr.span("flush.materialize", n_outputs=len(out_idx)):
+            for i, pos in zip(out_idx, out_pos):
+                lz = live[i]
+                lanes = g.layout.from_wire(outs[pos])[:g.n]
+                if g.raw:  # re-join the lanes of each caller uint64 word
+                    val = g.layout.join_raw(lanes)
+                else:
+                    val = lanes.astype(np.uint64)
+                lz._value = val.reshape(lz.shape)
+                # A materialized handle never needs the graph again — drop
+                # the references so surviving handles don't pin the leaf
+                # snapshots (or the engine) for their lifetime.
+                lz._graph = None
+                lz._engine = None
+        if self.tracer is not None:
+            self.counters.inc("engine.flushes")
 
     _PLANEWISE = frozenset({"and", "or", "xor"})
 

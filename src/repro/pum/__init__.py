@@ -13,7 +13,12 @@ deprecated compat shim). Three pieces:
   for ``pum.asarray`` and auto-flushes on exit);
 * the backend registry (:func:`register_backend` and friends) — the
   sim-chip, word-domain-CPU and Pallas-TPU evaluators are selected by
-  capability lookup; new backends register additively.
+  capability lookup; new backends register additively;
+* telemetry (:func:`profile`, :class:`Tracer`, :class:`CounterBank`) —
+  ``with pum.profile(path="trace.json"):`` traces fused flush phases to
+  Chrome trace-event JSON and populates ``Device.counters``; zero
+  overhead (and zero behavior change) when not profiling. See
+  ``docs/observability.md``.
 
 See ``docs/api.md`` for the full surface, the Device lifecycle, the
 backend registry contract, and the old-call -> new-call migration table.
@@ -26,11 +31,13 @@ from repro.core.engine import EngineStats
 from repro.kernels.plane_layout import (LAYOUT32, LAYOUT64, PlaneLayout,
                                         get_layout)
 from repro.pum.api import (Device, PumArray, as_device, asarray,
-                           default_device, device)
+                           default_device, device, profile)
 from repro.pum.config import EngineConfig
+from repro.telemetry import CounterBank, Tracer
 
 __all__ = [
     "BackendSpec",
+    "CounterBank",
     "Device",
     "EngineConfig",
     "EngineStats",
@@ -38,6 +45,7 @@ __all__ = [
     "LAYOUT64",
     "PlaneLayout",
     "PumArray",
+    "Tracer",
     "as_device",
     "asarray",
     "available_backends",
@@ -45,6 +53,7 @@ __all__ = [
     "device",
     "get_backend",
     "get_layout",
+    "profile",
     "register_backend",
     "select_backend",
     "unregister_backend",

@@ -28,6 +28,8 @@ contract, now behind one type.
 
 from __future__ import annotations
 
+import contextlib
+
 import numpy as np
 
 from repro.core.engine import LazyArray
@@ -117,6 +119,13 @@ class Device:
     def stats(self):
         """Accumulated :class:`~repro.core.engine.EngineStats` charges."""
         return self.engine.stats
+
+    @property
+    def counters(self):
+        """The engine's telemetry :class:`~repro.telemetry.CounterBank`
+        (flush/pipeline-cache/auto-flush counters — populated only while
+        a tracer is attached, e.g. inside :func:`profile`)."""
+        return self.engine.counters
 
     def reset_stats(self) -> None:
         self.engine.reset_stats()
@@ -420,6 +429,40 @@ def asarray(x, device: Device | None = None) -> PumArray:
     """Wrap ``x`` as a :class:`PumArray` on ``device`` (default: the
     scoped/default device)."""
     return (device or default_device()).asarray(x)
+
+
+@contextlib.contextmanager
+def profile(device: Device | None = None, path: str | None = None):
+    """Trace one device's fused flushes for the duration of the block.
+
+    Attaches a fresh :class:`~repro.telemetry.Tracer` to ``device`` (the
+    scoped/default device when omitted), flushes any still-pending graph
+    on exit so the trace is complete, then detaches. Yields the tracer;
+    with ``path`` the Chrome trace-event JSON (plus the device's counters)
+    is written there on exit — open it in Perfetto or ``chrome://tracing``.
+
+        with pum.profile(path="trace.json") as tr:
+            y = pum.asarray(x) + x2
+        print(tr.span_names())   # flush.record ... flush.materialize
+
+    Profiling is observational only: results, ``Device.stats`` and the
+    scheduled command streams are bit-identical with or without it
+    (tested in tests/telemetry)."""
+    from repro.telemetry import Tracer
+
+    dev = device if device is not None else default_device()
+    tracer = Tracer()
+    prev = dev.engine.tracer
+    dev.engine.tracer = tracer
+    try:
+        yield tracer
+    finally:
+        try:
+            dev.flush()  # complete the trace: pending graphs span-ify
+        finally:
+            dev.engine.tracer = prev
+            if path is not None:
+                tracer.export(path, counters=dev.engine.counters)
 
 
 def as_device(obj) -> Device:

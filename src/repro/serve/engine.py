@@ -14,6 +14,14 @@ through ``repro.pum`` operators instead of a per-slot Python conditional.
 Results are bit-identical to the host path (tested); the device's cost
 plane (``ServeEngine.pum.stats``) prices what that bookkeeping would cost
 executed in DRAM. ``pum_bulk=False`` restores the pure-host loop.
+
+``telemetry=True`` records per-tick observability through the shared
+``repro.telemetry`` pieces: decode-slot occupancy and stop-predicate
+flush latency histograms in ``ServeEngine.counters`` plus ``serve.tick``
+/ ``serve.stop_predicate`` spans (with the PuM device's flush phases
+nested inside) in ``ServeEngine.tracer``. Telemetry never perturbs token
+output (tested) and is fully off — no tracer, no clock reads — by
+default.
 """
 
 from __future__ import annotations
@@ -46,11 +54,23 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_len: int = 256, eos_id: int = 1, seed: int = 0,
-                 greedy: bool = True, pum_bulk: bool = True):
+                 greedy: bool = True, pum_bulk: bool = True,
+                 telemetry: bool = False):
         self.cfg = cfg
         # Fused PuM device for bulk slot bookkeeping (stop masks): ops
         # record lazily and each tick's predicate compiles to one program.
         self.pum = pum.device(width=32, fuse=True) if pum_bulk else None
+        # Per-tick telemetry (opt-in): slot occupancy + stop-predicate
+        # latency in `counters`, tick/predicate spans in `tracer`. The
+        # PuM device's flush phases nest inside by attaching the same
+        # tracer to its engine.
+        from repro.telemetry import NULL_TRACER, CounterBank, Tracer
+        self.counters = CounterBank()
+        self.tracer = Tracer() if telemetry else None
+        self._tr = self.tracer if telemetry else NULL_TRACER
+        self.telemetry = telemetry
+        if telemetry and self.pum is not None:
+            self.pum.engine.tracer = self.tracer
         self.params = params if params is not None else init_params(
             cfg, jax.random.PRNGKey(seed))
         self.max_batch = max_batch
@@ -152,8 +172,16 @@ class ServeEngine:
     def tick(self) -> int:
         """One engine iteration: admit + one fused decode step.
         Returns number of active slots."""
+        with self._tr.span("serve.tick") as sp_tick:
+            return self._tick_inner(sp_tick)
+
+    def _tick_inner(self, sp_tick) -> int:
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if self.telemetry:
+            self.counters.inc("serve.ticks")
+            self.counters.observe("serve.active_slots", len(active))
+            sp_tick.args["active_slots"] = len(active)
         if not active:
             return 0
         logits, self.caches = self._decode(
@@ -166,14 +194,21 @@ class ServeEngine:
             req.out_tokens.append(tok)
             self.pos[slot] += 1
             self.cur_token[slot] = tok
-        if self.pum is not None:
-            done = self._stop_mask_pum(active)
-        else:
-            done = np.array(
-                [self.cur_token[s] == self.eos_id
-                 or len(self.slot_req[s].out_tokens)
-                 >= self.slot_req[s].max_new_tokens
-                 or self.pos[s] >= self.max_len - 1 for s in active])
+        with self._tr.span("serve.stop_predicate",
+                           path="pum" if self.pum is not None
+                           else "host") as sp:
+            if self.pum is not None:
+                done = self._stop_mask_pum(active)
+            else:
+                done = np.array(
+                    [self.cur_token[s] == self.eos_id
+                     or len(self.slot_req[s].out_tokens)
+                     >= self.slot_req[s].max_new_tokens
+                     or self.pos[s] >= self.max_len - 1 for s in active])
+        if self.telemetry:
+            # Latency histogram of the stop-predicate flush (the fused
+            # program's record->materialize round trip per tick).
+            self.counters.observe("serve.stop_flush_ns", sp.dur_ns)
         for stop, slot in zip(done, active):
             if stop:
                 req = self.slot_req[slot]

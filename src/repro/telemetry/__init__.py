@@ -1,0 +1,30 @@
+"""repro.telemetry — zero-overhead-when-disabled observability.
+
+Three pieces, one contract:
+
+* :class:`CounterBank` — named monotonic counters + log2-bucket
+  histograms; the single counter container used by the engine, the
+  serve tier, and the derived controller counters.
+* :func:`derive_controller_counters` — post-hoc replay of a
+  ``ScheduleResult``/``MuxResult`` command trace into bus-utilization,
+  row-buffer, stall, and refresh counters. Derivation only *reads* the
+  audit trail the controller already emits, so scheduling stays
+  byte-identical whether or not anyone is watching.
+* :class:`Tracer` / :data:`NULL_TRACER` — span context-managers around
+  the fused pipeline's flush phases, exportable as Chrome trace-event
+  JSON (opens in Perfetto).
+
+See ``docs/observability.md`` for counter definitions, units, and the
+span taxonomy.
+"""
+
+from repro.telemetry.counters import CounterBank, derive_controller_counters
+from repro.telemetry.tracer import NULL_TRACER, Span, Tracer
+
+__all__ = [
+    "CounterBank",
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "derive_controller_counters",
+]

@@ -1,0 +1,255 @@
+"""CounterBank + post-hoc controller counter derivation.
+
+The observability contract of this repo is *derive, don't instrument the
+scheduler*: the controller's hot loop stays byte-identical whether or not
+anyone is watching, and every controller counter is computed after the
+fact from the ``ScheduleResult.cmds``/``issue_times`` audit trail the
+multiplexer already emits (the same split gram makes between its
+``Multiplexer`` and the passive ``core/bandwidth.py`` observer).
+
+:class:`CounterBank` is the one counter container used across the stack —
+engine flush counters, serve-tier occupancy/latency histograms, and the
+derived controller counters all render through the same
+``as_dict()``/``__repr__`` schema, so telemetry JSON and interactive
+inspection agree.
+
+Units: every counter name carries its unit as a suffix where one applies
+(``*_ns`` nanoseconds, ``*_j`` joules); unsuffixed counters are plain
+event counts. Histogram observations are raw values bucketed by power of
+two (``observe``).
+"""
+
+from __future__ import annotations
+
+import math
+from collections import deque
+
+
+class CounterBank:
+    """Named monotonic counters plus power-of-two value histograms.
+
+    ``inc(name, v)`` accumulates a counter; ``observe(name, v)`` records a
+    sample into a histogram (count / total / min / max / log2 buckets —
+    the shape a latency distribution needs without storing samples).
+    Everything renders through :meth:`as_dict` with plain-JSON types.
+    """
+
+    __slots__ = ("_counters", "_hists")
+
+    def __init__(self):
+        self._counters: dict[str, float] = {}
+        self._hists: dict[str, dict] = {}
+
+    # -- counters ------------------------------------------------------- #
+
+    def inc(self, name: str, value: float = 1) -> None:
+        self._counters[name] = self._counters.get(name, 0) + value
+
+    def get(self, name: str, default: float = 0) -> float:
+        return self._counters.get(name, default)
+
+    def __getitem__(self, name: str) -> float:
+        return self._counters[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._counters
+
+    def __len__(self) -> int:
+        return len(self._counters) + len(self._hists)
+
+    # -- histograms ----------------------------------------------------- #
+
+    def observe(self, name: str, value: float) -> None:
+        """Record one sample into the ``name`` histogram (log2 buckets:
+        bucket ``k`` counts samples in ``(2**(k-1), 2**k]``; non-positive
+        samples land in bucket 0)."""
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = {"count": 0, "total": 0.0,
+                                     "min": math.inf, "max": -math.inf,
+                                     "buckets": {}}
+        h["count"] += 1
+        h["total"] += value
+        h["min"] = min(h["min"], value)
+        h["max"] = max(h["max"], value)
+        k = 0 if value <= 1 else math.ceil(math.log2(value))
+        h["buckets"][k] = h["buckets"].get(k, 0) + 1
+
+    def histogram(self, name: str) -> dict:
+        """Snapshot of one histogram: ``count``/``total``/``min``/``max``/
+        ``mean``/``buckets`` (bucket key = log2 upper bound)."""
+        h = self._hists[name]
+        return dict(h, mean=(h["total"] / h["count"] if h["count"] else 0.0),
+                    buckets=dict(h["buckets"]))
+
+    # -- aggregate views ------------------------------------------------ #
+
+    def merge(self, other: "CounterBank") -> "CounterBank":
+        """Accumulate ``other`` into this bank (counters add; histograms
+        combine bucket-wise). Returns self for chaining."""
+        for name, v in other._counters.items():
+            self.inc(name, v)
+        for name, h in other._hists.items():
+            mine = self._hists.get(name)
+            if mine is None:
+                self._hists[name] = {"count": h["count"], "total": h["total"],
+                                     "min": h["min"], "max": h["max"],
+                                     "buckets": dict(h["buckets"])}
+            else:
+                mine["count"] += h["count"]
+                mine["total"] += h["total"]
+                mine["min"] = min(mine["min"], h["min"])
+                mine["max"] = max(mine["max"], h["max"])
+                for k, n in h["buckets"].items():
+                    mine["buckets"][k] = mine["buckets"].get(k, 0) + n
+        return self
+
+    def as_dict(self) -> dict:
+        """Plain-JSON snapshot: ``{"counters": {...}, "histograms": {...}}``
+        (the schema ``BENCH_*.json`` embeds and ``docs/observability.md``
+        documents)."""
+        return {
+            "counters": dict(sorted(self._counters.items())),
+            "histograms": {name: self.histogram(name)
+                           for name in sorted(self._hists)},
+        }
+
+    def __repr__(self) -> str:
+        parts = [f"{k}={v:g}" for k, v in sorted(self._counters.items())]
+        parts += [f"{k}=hist(n={h['count']})"
+                  for k, h in sorted(self._hists.items())]
+        body = ", ".join(parts[:8]) + (", ..." if len(parts) > 8 else "")
+        return f"CounterBank({body})"
+
+
+# --------------------------------------------------------------------- #
+# Post-hoc controller counter derivation
+# --------------------------------------------------------------------- #
+
+
+def derive_controller_counters(result, timings=None) -> CounterBank:
+    """Derive controller counters from a scheduled command trace.
+
+    ``result`` is anything carrying the audit trail — a
+    ``ScheduleResult`` (``cmds`` + ``issue_times``), a ``MuxResult``
+    (``events``), or a ``ControllerTrace`` (which adds refresh
+    accounting). Derivation is pure: the trace is only read, so the
+    schedule stays byte-identical whether or not counters are derived
+    (tested in tests/telemetry).
+
+    Counters produced (units in the name):
+
+    * ``cmd.act`` / ``cmd.pre`` / ``cmd.rdwr`` / ``cmd.nop`` /
+      ``cmd.total`` — commands issued per type (``total`` excludes NOPs,
+      which never occupy the command bus).
+    * ``wall_ns`` — schedule makespan (last issue time).
+    * ``cmd_bus_busy_ns`` — command-bus occupancy (one tCK per non-NOP
+      command); ``cmd_bus_utilization`` = busy / wall.
+    * ``data_bus_busy_ns`` — data-bus occupancy (one tBL burst per
+      RD/WR); ``data_bus_utilization`` = busy / wall.
+    * ``row.hit`` / ``row.miss`` / ``row.conflict`` — per column command:
+      *hit* = no ACT needed since the previous column on that bank (the
+      row was already latched), *miss* = an ACT on an idle bank preceded
+      it, *conflict* = the preceding ACT re-opened a bank whose last PRE
+      closed a *different* row. Also emitted per bank as
+      ``bank<N>.row_{hit,miss,conflict}``.
+    * ``stall.trrd_ns`` / ``stall.tfaw_ns`` — ACT issue delay beyond the
+      bank's own readiness attributable to rank-wide tRRD spacing and to
+      the rolling four-activation window.
+    * ``refresh.n`` / ``refresh.lockout_ns`` / ``refresh.stall_ns`` —
+      REF accounting, when the trace carries it (``ControllerTrace``).
+    * ``energy_j`` — when the trace carries it.
+
+    ``timings`` defaults to the trace's own ``timings`` attribute when it
+    has one (``MuxResult``/``ControllerTrace``), else DDR4-2400.
+    """
+    from repro.core.commands import Op
+
+    if timings is None:
+        timings = getattr(result, "timings", None)
+    if timings is None:
+        from repro.core.timing import DDR4_2400
+        timings = DDR4_2400
+    t = timings
+
+    events = list(result.events)
+    bank = CounterBank()
+    n_act = n_pre = n_rdwr = n_nop = 0
+
+    # Per-bank open-row replay for hit/miss/conflict classification, and
+    # per-bank last-issue for stall attribution.
+    open_row: dict[int, int | None] = {}   # bank -> latched row
+    closed_row: dict[int, int] = {}        # bank -> row its last PRE closed
+    col_kind: dict[int, str] = {}     # bank -> classification of next column
+    last_bank_issue: dict[int, float] = {}
+    faw: deque[float] = deque()
+    last_act = -math.inf
+    trrd_stall = tfaw_stall = 0.0
+
+    for cmd, when in events:
+        if cmd.op is Op.ACT:
+            # Stall attribution: delay past the bank's own readiness,
+            # credited first to tRRD spacing, then to the tFAW window
+            # (matching the order the multiplexer applies them).
+            prev = last_bank_issue.get(cmd.bank)
+            ready = cmd.min_gap if prev is None else prev + cmd.min_gap
+            trrd_ready = last_act + t.trrd_s
+            tfaw_ready = faw[0] + t.tfaw if len(faw) >= 4 else -math.inf
+            trrd_stall += max(0.0, min(when, trrd_ready) - ready)
+            tfaw_stall += max(0.0,
+                              min(when, tfaw_ready) - max(ready, trrd_ready))
+            if len(faw) >= 4:
+                faw.popleft()
+            faw.append(when)
+            last_act = when
+            n_act += 1
+            # Row-buffer classification for the next column command: an
+            # ACT on an idle bank is a miss; an ACT re-opening a bank
+            # whose last PRE closed a different row is a conflict.
+            prev_row = closed_row.get(cmd.bank)
+            col_kind[cmd.bank] = ("conflict" if prev_row is not None
+                                  and prev_row != cmd.row else "miss")
+            open_row[cmd.bank] = cmd.row
+        elif cmd.op is Op.PRE:
+            n_pre += 1
+            if open_row.get(cmd.bank) is not None:
+                closed_row[cmd.bank] = open_row[cmd.bank]
+            open_row[cmd.bank] = None
+        elif cmd.op in (Op.RD, Op.WR):
+            n_rdwr += 1
+            kind = col_kind.pop(cmd.bank, "hit")
+            bank.inc(f"row.{kind}")
+            bank.inc(f"bank{cmd.bank}.row_{kind}")
+        else:
+            n_nop += 1
+        if cmd.op is not Op.NOP:
+            last_bank_issue[cmd.bank] = when
+
+    wall = events[-1][1] if events else 0.0
+    n_total = n_act + n_pre + n_rdwr
+    bank.inc("cmd.act", n_act)
+    bank.inc("cmd.pre", n_pre)
+    bank.inc("cmd.rdwr", n_rdwr)
+    bank.inc("cmd.nop", n_nop)
+    bank.inc("cmd.total", n_total)
+    bank.inc("wall_ns", wall)
+    bank.inc("cmd_bus_busy_ns", n_total * t.tck)
+    bank.inc("data_bus_busy_ns", n_rdwr * t.tbl)
+    if wall > 0:
+        bank.inc("cmd_bus_utilization", n_total * t.tck / wall)
+        bank.inc("data_bus_utilization", n_rdwr * t.tbl / wall)
+    bank.inc("stall.trrd_ns", trrd_stall)
+    bank.inc("stall.tfaw_ns", tfaw_stall)
+
+    energy = getattr(result, "energy_j", None)
+    if energy is not None:
+        bank.inc("energy_j", energy)
+    n_ref = getattr(result, "n_refreshes", None)
+    if n_ref is not None:
+        bank.inc("refresh.n", n_ref)
+        bank.inc("refresh.lockout_ns",
+                 sum(e - s for s, e in
+                     getattr(result, "refresh_windows", ())))
+        bank.inc("refresh.stall_ns",
+                 getattr(result, "refresh_stall_ns", 0.0))
+    return bank

@@ -1,0 +1,123 @@
+"""tools/bench_compare.py gate logic: a doctored baseline with a >25%
+regression must fail, within-threshold drift must pass, and the
+structural row gate must catch renamed/dropped rows."""
+
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+TOOLS = pathlib.Path(__file__).resolve().parents[2] / "tools"
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(name, TOOLS / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+bench_compare = _load("bench_compare")
+
+HOST = {"platform": "x", "machine": "m", "python": "3.11", "cpu_count": 8}
+
+
+def _doc(rows, host=HOST):
+    return {"schema": 1, "bench": "unit", "git_sha": "abc", "host": host,
+            "rows": {n: {"ns_per_call": ns} for n, ns in rows.items()}}
+
+
+def test_identical_passes_both_modes():
+    doc = _doc({"a": 100.0, "b": 50.0})
+    assert bench_compare.compare(doc, copy.deepcopy(doc)) == []
+    assert bench_compare.compare(doc, copy.deepcopy(doc),
+                                 check_rows_only=True) == []
+
+
+def test_regression_beyond_threshold_fails():
+    """The acceptance demonstration: doctor the baseline so the fresh run
+    looks >25% slower — the gate must fail and name the row."""
+    baseline = _doc({"a": 100.0, "b": 200.0})
+    fresh = _doc({"a": 130.0, "b": 200.0})   # a: 1.30x > 1.25x limit
+    failures = bench_compare.compare(baseline, fresh)
+    assert len(failures) == 1
+    assert failures[0].startswith("a:")
+    assert "1.30x" in failures[0]
+
+
+def test_within_threshold_drift_passes():
+    baseline = _doc({"a": 100.0})
+    fresh = _doc({"a": 120.0})               # 1.20x < 1.25x
+    assert bench_compare.compare(baseline, fresh) == []
+
+
+def test_speedup_never_fails():
+    baseline = _doc({"a": 100.0})
+    fresh = _doc({"a": 10.0})
+    assert bench_compare.compare(baseline, fresh) == []
+
+
+def test_missing_and_extra_rows():
+    baseline = _doc({"a": 1.0, "gone": 1.0})
+    fresh = _doc({"a": 1.0, "new": 1.0})
+    failures = bench_compare.compare(baseline, fresh, check_rows_only=True)
+    assert any("gone" in f and "missing" in f for f in failures)
+    assert any("new" in f and "not in baseline" in f for f in failures)
+    # Row mismatches also fail the full mode.
+    assert bench_compare.compare(baseline, fresh) != []
+
+
+def test_host_grace_loosens_cross_host_threshold():
+    baseline = _doc({"a": 100.0})
+    other_host = dict(HOST, machine="different")
+    fresh_same = _doc({"a": 160.0})                      # 1.6x
+    fresh_other = _doc({"a": 160.0}, host=other_host)
+    assert bench_compare.compare(baseline, fresh_same) != []
+    # Cross-host: limit = 1.25 * 2.0 = 2.5x, so 1.6x passes...
+    assert bench_compare.compare(baseline, fresh_other) == []
+    # ...but a catastrophic regression still fails.
+    assert bench_compare.compare(
+        baseline, _doc({"a": 300.0}, host=other_host)) != []
+
+
+def test_non_positive_time_is_error():
+    baseline = _doc({"a": 100.0})
+    fresh = _doc({"a": -1.0})
+    failures = bench_compare.compare(baseline, fresh)
+    assert any("non-positive" in f for f in failures)
+
+
+def test_load_bench_rejects_wrong_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": 99, "rows": {}}))
+    with pytest.raises(ValueError):
+        bench_compare.load_bench(str(p))
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    base_p = tmp_path / "base.json"
+    fresh_p = tmp_path / "fresh.json"
+    base_p.write_text(json.dumps(_doc({"a": 100.0})))
+
+    fresh_p.write_text(json.dumps(_doc({"a": 105.0})))
+    assert bench_compare.main([str(base_p), str(fresh_p)]) == 0
+    assert "gate OK" in capsys.readouterr().out
+
+    fresh_p.write_text(json.dumps(_doc({"a": 500.0})))
+    assert bench_compare.main([str(base_p), str(fresh_p)]) == 1
+    assert "FAILED" in capsys.readouterr().err
+
+    assert bench_compare.main([str(base_p), str(tmp_path / "nope.json")]) == 2
+
+
+def test_committed_baselines_self_compare():
+    """The two BENCH files committed at the repo root are loadable and
+    pass their own structural gate."""
+    root = TOOLS.parent
+    for name in ("BENCH_kernel.json", "BENCH_bankpar.json"):
+        doc = bench_compare.load_bench(str(root / name))
+        assert doc["rows"], name
+        assert bench_compare.compare(doc, copy.deepcopy(doc),
+                                     check_rows_only=True) == []

@@ -1,0 +1,199 @@
+"""CounterBank semantics and the post-hoc controller counter derivation,
+including a hand-scheduled two-bank trace where bus utilization and the
+tRRD/tFAW stall split are computable by hand."""
+
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.controller import MemoryController, retarget_program
+from repro.core.commands import Cmd, CommandScheduler, Op, ScheduleResult
+from repro.core.cost_model import CostModel
+from repro.core.timing import DDR4_2400
+from repro.telemetry import CounterBank, derive_controller_counters
+
+# --------------------------------------------------------------------- #
+# CounterBank
+# --------------------------------------------------------------------- #
+
+
+def test_counterbank_inc_get_contains():
+    b = CounterBank()
+    assert b.get("x") == 0 and "x" not in b
+    b.inc("x")
+    b.inc("x", 2.5)
+    assert b["x"] == 3.5 and "x" in b and len(b) == 1
+
+
+def test_counterbank_histogram_log2_buckets():
+    b = CounterBank()
+    for v in (0, 1, 2, 3, 4, 100):
+        b.observe("lat", v)
+    h = b.histogram("lat")
+    assert h["count"] == 6
+    assert h["total"] == 110
+    assert h["min"] == 0 and h["max"] == 100
+    assert h["mean"] == pytest.approx(110 / 6)
+    # bucket k holds samples in (2^(k-1), 2^k]; non-positive and <=1 in 0
+    assert h["buckets"] == {0: 2, 1: 1, 2: 2, 7: 1}
+
+
+def test_counterbank_merge():
+    a, b = CounterBank(), CounterBank()
+    a.inc("n", 1)
+    b.inc("n", 2)
+    b.inc("m", 5)
+    a.observe("h", 3)
+    b.observe("h", 100)
+    a.merge(b)
+    assert a["n"] == 3 and a["m"] == 5
+    h = a.histogram("h")
+    assert h["count"] == 2 and h["min"] == 3 and h["max"] == 100
+
+
+def test_counterbank_as_dict_json_shape():
+    import json
+
+    b = CounterBank()
+    b.inc("z")
+    b.inc("a", 2)
+    b.observe("lat_ns", 7)
+    d = b.as_dict()
+    assert list(d["counters"]) == ["a", "z"]  # sorted
+    json.dumps(d)  # plain-JSON types only
+    assert "CounterBank(" in repr(b)
+
+
+# --------------------------------------------------------------------- #
+# Hand-computable trace: bus utilization + stall attribution
+# --------------------------------------------------------------------- #
+
+# Simple integral grid so every expected number is hand-derivable:
+#   tCK=1, tBL=2, tRRD=4, tFAW=30.
+T = dataclasses.replace(DDR4_2400, tck=1.0, tbl=2.0, trrd_s=4.0, tfaw=30.0)
+
+
+def _hand_trace() -> ScheduleResult:
+    ev = [
+        (Cmd(Op.ACT, 0, 1), 0.0),    # miss class opens b0
+        (Cmd(Op.ACT, 1, 2), 4.0),    # waited tRRD: stall 4
+        (Cmd(Op.ACT, 2, 3), 8.0),    # stall 4
+        (Cmd(Op.ACT, 3, 4), 12.0),   # stall 4
+        # 5th ACT: bank ready at 0, tRRD-ready 16, tFAW-ready 0+30=30
+        # -> 16 ns credited to tRRD, 14 ns to the tFAW window.
+        (Cmd(Op.ACT, 4, 5), 30.0),
+        (Cmd(Op.RD, 0, 1), 31.0),    # first column after ACT: row miss
+        (Cmd(Op.RD, 0, 1), 33.0),    # same open row: row hit
+        (Cmd(Op.PRE, 0, -1), 40.0),  # closes row 1
+        (Cmd(Op.ACT, 0, 9), 44.0),   # re-opens b0 with a DIFFERENT row
+        (Cmd(Op.WR, 0, 9), 48.0),    # -> row conflict
+    ]
+    return ScheduleResult(
+        total_ns=48.0, energy_j=7e-9, n_acts=6, n_pres=1, n_rdwr=3,
+        issue_times=[t for _, t in ev], cmds=[c for c, _ in ev])
+
+
+def test_hand_trace_command_counts_and_bus_utilization():
+    c = derive_controller_counters(_hand_trace(), T)
+    assert c["cmd.act"] == 6
+    assert c["cmd.pre"] == 1
+    assert c["cmd.rdwr"] == 3
+    assert c["cmd.total"] == 10
+    assert c["wall_ns"] == 48.0
+    # 10 non-NOP commands x 1 ns tCK on a 48 ns wall.
+    assert c["cmd_bus_busy_ns"] == 10.0
+    assert c["cmd_bus_utilization"] == pytest.approx(10 / 48)
+    # 3 column bursts x 2 ns tBL.
+    assert c["data_bus_busy_ns"] == 6.0
+    assert c["data_bus_utilization"] == pytest.approx(6 / 48 )
+    assert c["energy_j"] == pytest.approx(7e-9)
+
+
+def test_hand_trace_stall_attribution():
+    c = derive_controller_counters(_hand_trace(), T)
+    # Stall = issue delay beyond the bank's own readiness (all five
+    # banks ready at t=0 here), credited to tRRD up to the rank's tRRD
+    # horizon: ACTs 2-5 waited 4, 8, 12 and 16 ns behind the previous
+    # ACT's +4 ns horizon. The 5th then waited 14 ns more for the
+    # four-activation window (tFAW horizon 0+30=30 vs tRRD horizon 16).
+    assert c["stall.trrd_ns"] == pytest.approx(4 + 8 + 12 + 16)
+    assert c["stall.tfaw_ns"] == pytest.approx(14.0)
+
+
+def test_hand_trace_row_classification():
+    c = derive_controller_counters(_hand_trace(), T)
+    assert c["row.miss"] == 1       # first RD after opening an idle bank
+    assert c["row.hit"] == 1        # second RD on the still-open row
+    assert c["row.conflict"] == 1   # WR after re-opening a different row
+    assert c["bank0.row_miss"] == 1
+    assert c["bank0.row_hit"] == 1
+    assert c["bank0.row_conflict"] == 1
+
+
+def test_same_row_reopen_is_miss_not_conflict():
+    ev = [
+        (Cmd(Op.ACT, 0, 7), 0.0),
+        (Cmd(Op.RD, 0, 7), 14.0),
+        (Cmd(Op.PRE, 0, -1), 22.0),
+        (Cmd(Op.ACT, 0, 7), 36.0),   # same row back: a miss, no conflict
+        (Cmd(Op.RD, 0, 7), 50.0),
+    ]
+    r = ScheduleResult(total_ns=50.0, energy_j=0.0, n_acts=2, n_pres=1,
+                      n_rdwr=2, issue_times=[t for _, t in ev],
+                      cmds=[c for c, _ in ev])
+    c = derive_controller_counters(r, T)
+    assert c["row.miss"] == 2
+    assert c.get("row.conflict", 0) == 0
+
+
+def test_empty_trace():
+    r = ScheduleResult(total_ns=0.0, energy_j=0.0, n_acts=0, n_pres=0,
+                      n_rdwr=0, issue_times=[], cmds=[])
+    c = derive_controller_counters(r, T)
+    assert c["cmd.total"] == 0 and c["wall_ns"] == 0
+    assert "cmd_bus_utilization" not in c  # undefined at zero wall
+
+
+# --------------------------------------------------------------------- #
+# Real controller traces
+# --------------------------------------------------------------------- #
+
+
+def _maj_programs(n_ops=8, banks=4):
+    unit = CostModel(row_bits=65536).maj_unit_programs(3, 8)
+    return [retarget_program(p, i % banks)
+            for i in range(n_ops) for p in unit]
+
+
+def test_controller_trace_counters_match_mux_accounting():
+    ctrl = MemoryController(n_banks=4)
+    tr = ctrl.schedule(_maj_programs())
+    c = tr.counters()   # ControllerTrace carries its own timings
+    assert c["cmd.act"] == tr.n_acts
+    assert c["cmd.pre"] == tr.n_pres
+    assert c["cmd.rdwr"] == tr.n_rdwr
+    assert c["wall_ns"] == pytest.approx(tr.total_ns)
+    assert c["energy_j"] == pytest.approx(tr.energy_j)
+    assert c["refresh.n"] == tr.n_refreshes
+    assert c["refresh.stall_ns"] == pytest.approx(tr.refresh_stall_ns)
+    assert 0 < c["cmd_bus_utilization"] < 1
+
+
+def test_sequential_scheduler_counters():
+    flat = [c for p in _maj_programs(4, 1) for c in p]
+    res = CommandScheduler(DDR4_2400).schedule(flat)
+    c = res.counters()
+    assert c["cmd.act"] == res.n_acts
+    assert c["cmd.total"] == res.n_acts + res.n_pres + res.n_rdwr
+
+
+def test_derivation_is_pure_and_idempotent():
+    ctrl = MemoryController(n_banks=4)
+    tr = ctrl.schedule(_maj_programs())
+    before = (list(tr.cmds), list(tr.issue_times))
+    c1 = tr.counters().as_dict()
+    c2 = tr.counters().as_dict()
+    assert c1 == c2
+    assert (list(tr.cmds), list(tr.issue_times)) == before

@@ -1,0 +1,89 @@
+"""Telemetry must be provably free: bit-identical results, identical
+EngineStats, and identical scheduled command traces whether telemetry is
+attached or not — across widths, eager vs fused, and controller="auto"."""
+
+import numpy as np
+import pytest
+
+import repro.pum as pum
+from repro.controller import MemoryController, retarget_program
+from repro.core.cost_model import CostModel
+
+pytestmark = pytest.mark.fused
+
+
+def _program(dev, a, b):
+    x = dev.asarray(a)
+    t = (x + b) * x
+    t = t ^ b
+    t = t & x
+    q, r = divmod(t, (x | np.uint64(1)))
+    return (q + r).to_numpy()
+
+
+def _run(width, fuse, controller, profiled, a, b):
+    dev = pum.device(width=width, fuse=fuse, controller=controller)
+    if profiled:
+        with pum.profile(dev) as tr:
+            out = _program(dev, a, b)
+        assert tr.events or not fuse  # fused runs record flush spans
+    else:
+        out = _program(dev, a, b)
+    return out, dev.stats
+
+
+@pytest.mark.parametrize("width", [8, 32, 64])
+@pytest.mark.parametrize("fuse", [False, True])
+def test_profile_does_not_perturb_results_or_stats(width, fuse):
+    rng = np.random.default_rng(width)
+    a = rng.integers(0, 1 << min(width, 63), 300, dtype=np.uint64)
+    b = rng.integers(1, 1 << min(width, 63), 300, dtype=np.uint64)
+    base, stats_base = _run(width, fuse, None, False, a, b)
+    prof, stats_prof = _run(width, fuse, None, True, a, b)
+    np.testing.assert_array_equal(base, prof)
+    assert stats_base == stats_prof
+
+
+def test_profile_invariance_with_controller_auto():
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 1 << 16, 200, dtype=np.uint64)
+    b = rng.integers(1, 1 << 16, 200, dtype=np.uint64)
+    base, stats_base = _run(16, True, "auto", False, a, b)
+    prof, stats_prof = _run(16, True, "auto", True, a, b)
+    np.testing.assert_array_equal(base, prof)
+    assert stats_base == stats_prof
+
+
+def test_counters_not_populated_without_tracer():
+    """Zero-overhead contract: with no tracer attached the engine's
+    CounterBank stays empty (no per-op work on the disabled path)."""
+    dev = pum.device(width=16, fuse=True)
+    _program(dev, np.arange(64, dtype=np.uint64),
+             np.arange(64, dtype=np.uint64) + 1)
+    assert len(dev.counters) == 0
+    assert dev.engine.tracer is None
+
+
+def test_schedule_identical_with_and_without_derivation():
+    """Deriving counters replays the audit trail; the schedule itself is
+    byte-identical whether or not anyone derives (and across repeats)."""
+    unit = CostModel(row_bits=65536).maj_unit_programs(3, 8)
+    progs = [retarget_program(p, i % 4) for i in range(8) for p in unit]
+    tr1 = MemoryController(n_banks=4).schedule(progs)
+    tr1.counters()
+    tr2 = MemoryController(n_banks=4).schedule(progs)
+    assert tr1.cmds == tr2.cmds
+    assert tr1.issue_times == tr2.issue_times
+    assert tr1.total_ns == tr2.total_ns
+    assert tr1.energy_j == tr2.energy_j
+
+
+def test_profile_restores_prior_tracer_and_flushes():
+    dev = pum.device(width=16, fuse=True)
+    a = np.arange(32, dtype=np.uint64)
+    with pum.profile(dev) as tr:
+        pending = dev.asarray(a) + 1
+    # exit flushed the pending graph and detached the tracer
+    assert dev.engine.tracer is None
+    np.testing.assert_array_equal(pending.to_numpy(), a + 1)
+    assert any(n == "flush.dispatch" for n in tr.span_names())

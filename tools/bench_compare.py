@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: diff a fresh BENCH_*.json against the committed
+baseline.
+
+Two modes:
+
+* ``--check-rows`` — structural gate only: the fresh emit must contain
+  exactly the baseline's row set (a renamed or dropped benchmark row is a
+  structured error naming the rows, replacing CI's old silent
+  grep-for-row-names pipeline).
+* full (default) — per-row relative wall-time comparison:
+  ``fresh_ns / baseline_ns`` must stay below ``--threshold`` (default
+  1.25, i.e. a >25% regression fails). When the two files carry
+  different host fingerprints the threshold is multiplied by
+  ``--host-grace`` (default 2.0): cross-host wall times gate only
+  catastrophic regressions, same-host runs gate tightly.
+
+Rows whose baseline or fresh time is non-positive (a FAILED row) are
+errors in both modes. Speedups never fail — the gate is one-sided;
+refresh the committed baseline to ratchet it.
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.run --only kernel_bench \
+        --emit-dir /tmp/bench > /dev/null
+    python tools/bench_compare.py BENCH_kernel.json \
+        /tmp/bench/BENCH_kernel.json [--threshold 1.25] [--check-rows]
+
+Exit codes: 0 ok, 1 regression/row mismatch, 2 unusable input files.
+The comparison logic is importable (``compare()``) for the unit tests.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_bench(path: str) -> dict:
+    """Parse one BENCH_*.json; raises ValueError on schema mismatch."""
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    if doc.get("schema") != 1 or "rows" not in doc:
+        raise ValueError(f"{path}: not a schema-1 BENCH file")
+    return doc
+
+
+def compare(baseline: dict, fresh: dict, threshold: float = 1.25,
+            check_rows_only: bool = False,
+            host_grace: float = 2.0) -> list[str]:
+    """Return the list of failures (empty = gate passes).
+
+    ``baseline``/``fresh`` are parsed BENCH documents. In row-check mode
+    only the row sets are compared; in full mode each shared row's
+    ``ns_per_call`` ratio is gated at ``threshold`` (× ``host_grace``
+    when the host fingerprints differ).
+    """
+    b_rows, f_rows = baseline["rows"], fresh["rows"]
+    failures = []
+    missing = sorted(set(b_rows) - set(f_rows))
+    extra = sorted(set(f_rows) - set(b_rows))
+    if missing:
+        failures.append(f"rows missing from fresh run: {missing}")
+    if extra:
+        failures.append(f"rows not in baseline (refresh it?): {extra}")
+    if check_rows_only:
+        return failures
+
+    limit = threshold
+    if baseline.get("host") != fresh.get("host"):
+        limit *= host_grace
+    for name in sorted(set(b_rows) & set(f_rows)):
+        b = b_rows[name].get("ns_per_call", 0)
+        f = f_rows[name].get("ns_per_call", 0)
+        if b <= 0 or f <= 0:
+            failures.append(f"{name}: non-positive time "
+                            f"(baseline {b} ns, fresh {f} ns)")
+            continue
+        ratio = f / b
+        if ratio > limit:
+            failures.append(
+                f"{name}: {ratio:.2f}x slower than baseline "
+                f"({b:.0f} ns -> {f:.0f} ns, limit {limit:.2f}x)")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate a fresh BENCH_*.json against the committed "
+                    "baseline")
+    ap.add_argument("baseline", help="committed BENCH_*.json")
+    ap.add_argument("fresh", help="freshly emitted BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="max fresh/baseline per-row ratio (default 1.25)")
+    ap.add_argument("--host-grace", type=float, default=2.0,
+                    help="threshold multiplier when host fingerprints "
+                         "differ (default 2.0)")
+    ap.add_argument("--check-rows", action="store_true",
+                    help="structural gate only: row sets must match")
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = load_bench(args.baseline)
+        fresh = load_bench(args.fresh)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"bench_compare: cannot load input: {e}", file=sys.stderr)
+        return 2
+
+    failures = compare(baseline, fresh, threshold=args.threshold,
+                       check_rows_only=args.check_rows,
+                       host_grace=args.host_grace)
+    mode = "row set" if args.check_rows else "perf"
+    if failures:
+        print(f"bench_compare [{baseline['bench']}]: {mode} gate FAILED:",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench_compare [{baseline['bench']}]: {mode} gate OK "
+          f"({len(baseline['rows'])} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

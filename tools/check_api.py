@@ -21,11 +21,12 @@ import sys
 # operator set IS the API.
 EXPECTED = {
     "repro.pum": [
-        "BackendSpec", "Device", "EngineConfig", "EngineStats", "LAYOUT32",
-        "LAYOUT64", "PlaneLayout", "PumArray",
+        "BackendSpec", "CounterBank", "Device", "EngineConfig",
+        "EngineStats", "LAYOUT32", "LAYOUT64", "PlaneLayout", "PumArray",
+        "Tracer",
         "as_device", "asarray", "available_backends", "default_device",
-        "device", "get_backend", "get_layout", "register_backend",
-        "select_backend", "unregister_backend",
+        "device", "get_backend", "get_layout", "profile",
+        "register_backend", "select_backend", "unregister_backend",
     ],
     "PumArray": [
         "__add__", "__and__", "__array__", "__array_priority__",
@@ -40,8 +41,8 @@ EXPECTED = {
     ],
     "Device": [
         "__enter__", "__exit__", "__init__", "__repr__", "asarray",
-        "charge", "flush", "latency_ms", "layout", "reset_stats", "stats",
-        "width",
+        "charge", "counters", "flush", "latency_ms", "layout",
+        "reset_stats", "stats", "width",
     ],
     "EngineConfig": [
         "backend", "banks", "chained", "controller", "donate_leaves",
