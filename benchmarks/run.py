@@ -24,6 +24,7 @@ from benchmarks import common
 BENCH_NAMES = {
     "kernel_bench": "BENCH_kernel.json",
     "bank_parallelism": "BENCH_bankpar.json",
+    "reliability_sweep": "BENCH_reliability.json",
 }
 
 MODULES = [
@@ -41,6 +42,7 @@ MODULES = [
     "fig19_destruction",
     "fig20_realworld",
     "kernel_bench",
+    "reliability_sweep",
 ]
 
 

@@ -142,12 +142,27 @@ class MemoryController:
             timings=self.t)
 
     def schedule_batch(self, unit_programs, banks: int,
-                       n_batches: int = 1, refresh: bool | None = None
+                       n_batches: int = 1, refresh: bool | None = None,
+                       bank_order: tuple[int, ...] | None = None
                        ) -> ControllerTrace:
         """``n_batches`` copies of the unit program list on each of
-        ``banks`` banks (unit programs run back-to-back per bank)."""
+        ``banks`` banks (unit programs run back-to-back per bank).
+
+        ``bank_order`` names the physical banks to use and their visit
+        order (default: banks 0..banks-1 in index order) — the reliability
+        plane passes a calibration-ranked order so batches prefer strong
+        banks."""
+        if bank_order is None:
+            targets = range(banks)
+        else:
+            targets = list(bank_order)[:banks]
+            bad = [b for b in targets if not 0 <= b < self.n_banks]
+            if bad or len(set(targets)) != len(targets):
+                raise ValueError(
+                    f"bank_order must be distinct bank ids < "
+                    f"{self.n_banks}, got {list(bank_order)!r}")
         progs = []
-        for b in range(banks):
+        for b in targets:
             for _ in range(n_batches):
                 for prog in self._as_programs(unit_programs):
                     progs.append(retarget_program(prog, b))
@@ -162,7 +177,9 @@ class MemoryController:
         return tuple(tuple((c.op.value, round(c.min_gap, 6)) for c in p)
                      for p in progs)
 
-    def batch_cost(self, unit_programs, banks: int) -> BankBatchCost:
+    def batch_cost(self, unit_programs, banks: int,
+                   bank_order: tuple[int, ...] | None = None
+                   ) -> BankBatchCost:
         """Measured bank-parallel + refresh cost of one unit across banks.
 
         The unit (a list of programs, e.g. one MAJ op's primitive sequences)
@@ -183,11 +200,14 @@ class MemoryController:
         """
         banks = max(1, min(banks, self.n_banks))
         progs = self._as_programs(unit_programs)
-        key = (banks, self._signature(progs))
+        order = None if bank_order is None else tuple(bank_order)
+        key = (banks, order, self._signature(progs))
         if key in self._batch_cache:
             return self._batch_cache[key]
-        unit = self.schedule_batch(progs, 1, refresh=False).total_ns
-        makespan = self.schedule_batch(progs, banks, refresh=False).total_ns
+        unit = self.schedule_batch(progs, 1, refresh=False,
+                                   bank_order=order).total_ns
+        makespan = self.schedule_batch(progs, banks, refresh=False,
+                                       bank_order=order).total_ns
         if self.refresh and makespan > 0:
             # Repeat batches until the window spans >= 2 tREFI, then isolate
             # the refresh slowdown by comparing the same window with REF
@@ -195,9 +215,9 @@ class MemoryController:
             reps = max(2, min(256, math.ceil(
                 2 * self.trefi * self.postponing / makespan)))
             t_ref = self.schedule_batch(progs, banks, n_batches=reps,
-                                        refresh=True)
+                                        refresh=True, bank_order=order)
             t_off = self.schedule_batch(progs, banks, n_batches=reps,
-                                        refresh=False)
+                                        refresh=False, bank_order=order)
             factor = max(1.0, t_ref.total_ns / max(t_off.total_ns, 1e-9))
             amortized = makespan * factor
             n_ref, stall = t_ref.n_refreshes, t_ref.refresh_stall_ns

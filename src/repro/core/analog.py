@@ -29,6 +29,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.profiles import MfrProfile
 
@@ -71,17 +72,14 @@ def bitline_deviation(cell_values: jax.Array, neutral_mask: jax.Array,
     return num / den
 
 
-def maj_success_rate(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
-                     copies: int, n_neutral: int, n_bitlines: int = 4096,
-                     n_patterns: int = 64,
-                     process_variation: float | None = None,
-                     ) -> tuple[float, jax.Array]:
-    """Monte-Carlo success rate of MAJ-M with input replication.
-
-    Returns (mean success rate, per-bitline stable mask). Patterns sweep the
-    worst-case input imbalance (|ones-zeros| == 1) plus random patterns,
-    mirroring §6.1.1's random-data experiments.
-    """
+def _worst_margins(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
+                   copies: int, n_neutral: int, n_bitlines: int,
+                   n_patterns: int,
+                   process_variation: float | None) -> tuple[jax.Array, float]:
+    """Worst-case per-bitline sensing margin over random patterns plus the
+    per-trial noise sigma — the shared Monte-Carlo core of
+    :func:`maj_success_rate` (stable mask) and :func:`column_flip_probs`
+    (per-column failure probabilities). Returns ``(worst [B], sigma)``."""
     n_rows = m_inputs * copies + n_neutral
     kd, kp, kn = jax.random.split(key, 3)
     sample = draw_bitlines(kd, profile, n_rows, n_bitlines, process_variation)
@@ -110,11 +108,71 @@ def maj_success_rate(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
 
     margins = jax.vmap(pattern_margin)(patterns)  # [P, B]
     worst = jnp.min(margins, axis=0)              # [B]
-    trial_tail = TRIAL_TAIL_SIGMA * jnp.sqrt(
-        profile.trial_noise_sigma ** 2
-        + (profile.coupling_sigma ** 2) * n_rows)
+    sigma = jnp.sqrt(profile.trial_noise_sigma ** 2
+                     + (profile.coupling_sigma ** 2) * n_rows)
+    return worst, sigma
+
+
+def maj_success_rate(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
+                     copies: int, n_neutral: int, n_bitlines: int = 4096,
+                     n_patterns: int = 64,
+                     process_variation: float | None = None,
+                     ) -> tuple[float, jax.Array]:
+    """Monte-Carlo success rate of MAJ-M with input replication.
+
+    Returns (mean success rate, per-bitline stable mask). Patterns sweep the
+    worst-case input imbalance (|ones-zeros| == 1) plus random patterns,
+    mirroring §6.1.1's random-data experiments.
+    """
+    worst, sigma = _worst_margins(
+        key, profile, m_inputs=m_inputs, copies=copies, n_neutral=n_neutral,
+        n_bitlines=n_bitlines, n_patterns=n_patterns,
+        process_variation=process_variation)
+    trial_tail = TRIAL_TAIL_SIGMA * sigma
     stable = worst > trial_tail
     return float(jnp.mean(stable)), stable
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnProfile:
+    """One Monte-Carlo characterization of a row group's bitlines.
+
+    ``rate``/``stable`` match :func:`maj_success_rate` exactly (the same
+    margin draws); ``flip_p`` adds the per-column *per-trial* failure
+    probability — P(per-trial noise overwhelms the worst-case static
+    margin) = Phi(-worst / sigma) — which the reliability plane's fault
+    injector uses as the bit-flip rate of each column.
+    """
+    rate: float
+    stable: np.ndarray  # bool  [n_bitlines]
+    flip_p: np.ndarray  # float [n_bitlines], per-trial failure probability
+
+
+def column_flip_probs(key: jax.Array, profile: MfrProfile, *, m_inputs: int,
+                      copies: int, n_neutral: int, n_bitlines: int = 4096,
+                      n_patterns: int = 64,
+                      process_variation: float | None = None
+                      ) -> ColumnProfile:
+    """Per-column characterization for calibration maps (repro.reliability).
+
+    Shares the Monte-Carlo margin computation with
+    :func:`maj_success_rate` (identical ``rate``/``stable`` for identical
+    arguments) and additionally converts each bitline's worst-case static
+    margin into a per-trial flip probability via the Gaussian noise tail.
+    A column with a *negative* worst margin (charge sharing lands on the
+    wrong side of the sense amp even before noise) has ``flip_p > 0.5``.
+    """
+    worst, sigma = _worst_margins(
+        key, profile, m_inputs=m_inputs, copies=copies, n_neutral=n_neutral,
+        n_bitlines=n_bitlines, n_patterns=n_patterns,
+        process_variation=process_variation)
+    stable = worst > TRIAL_TAIL_SIGMA * sigma
+    # P(margin + N(0, sigma) < 0) = 0.5 * erfc(worst / (sigma * sqrt(2))).
+    flip = 0.5 * jax.scipy.special.erfc(
+        worst / (sigma * jnp.sqrt(jnp.float32(2.0))))
+    return ColumnProfile(rate=float(jnp.mean(stable)),
+                         stable=np.asarray(stable),
+                         flip_p=np.clip(np.asarray(flip, np.float64), 0, 1))
 
 
 def deviation_distribution(key: jax.Array, profile: MfrProfile, *,

@@ -81,7 +81,8 @@ from repro.core.geometry import PAPER_MODULE
 from repro.core.profiles import PROFILES
 from repro.kernels import fused_program as _fused
 from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
-                                         optimize_program)
+                                         optimize_program,
+                                         with_fault_injection)
 from repro.kernels.plane_layout import (PlaneLayout, get_layout,
                                         layout_for_width)
 from repro.telemetry import NULL_TRACER, CounterBank
@@ -364,7 +365,7 @@ class PulsarEngine:
                  flush_memory_bytes: int | None = 1 << 30,
                  donate_leaves: bool = False, layout=None,
                  fused_backend: str | None = None,
-                 ref_postponing: int = 1):
+                 ref_postponing: int = 1, reliability=None):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -474,6 +475,20 @@ class PulsarEngine:
         # is a single `is None` check per flush, nothing per op.
         self.counters = CounterBank()
         self.tracer = None
+        # Reliability plane: calibrated-map planning/placement plus the
+        # flush-time injection + vote/retry loop (repro.reliability). None
+        # (default) keeps every path exactly as before — the enabled check
+        # is a single `is None` per flush, like the tracer.
+        self.reliability = None
+        if reliability is not None:
+            from repro.reliability import ReliabilityPlane
+            self.reliability = ReliabilityPlane(
+                reliability, mfr=mfr, counters=self.counters)
+            if self.reliability.inject and not fuse:
+                raise ValueError(
+                    "reliability fault injection hooks the fused dispatch "
+                    "path; it requires fuse=True (eager ops never run the "
+                    "vote/retry loop)")
 
     # ------------------------------------------------------------------ #
     # Cost plumbing
@@ -527,10 +542,19 @@ class PulsarEngine:
             prof = self.profile
             cap = prof.max_simul_rows
             pows = [n for n in (4, 8, 16, 32) if n <= cap]
+            rel = self.reliability
 
             def sr_of(m, n):
-                return (self.db.mean(self.mfr, m, n, plan_style="pow2")
-                        if n >= m else 0.0)
+                if n < m:
+                    return 0.0
+                if rel is not None:
+                    # Variation-aware planning: the calibrated map's
+                    # (steering-weighted) rate for profiled configs; the
+                    # global DB covers the rest.
+                    s = rel.plan_success(m, n)
+                    if s is not None:
+                        return s
+                return self.db.mean(self.mfr, m, n, plan_style="pow2")
 
             candidates: list[tuple[int, int, int | None]] = []
             if kind in self._ARITH:
@@ -549,6 +573,8 @@ class PulsarEngine:
                             candidates.append((m, n, None))
                     m += 2
             best = None
+            best_ok = None  # reliability: best config MEETING the target
+            target = (rel.config.target_success if rel is not None else None)
             for m, n, n3 in candidates:
                 sr = sr_of(m, n)
                 if n3 is not None:
@@ -559,8 +585,15 @@ class PulsarEngine:
                 eff = cost.latency_ns / sr
                 if best is None or eff < best[0]:
                     best = (eff, m, n, sr, cost)
+                if target is not None and sr >= target \
+                        and (best_ok is None or eff < best_ok[0]):
+                    best_ok = (eff, m, n, sr, cost)
             assert best is not None, f"no viable config for {kind}"
-            self._best_cfg_cache[key] = best[1:]
+            # Per-op replication choice (Fig 11): prefer the fastest config
+            # whose calibrated success meets the reliability target; only
+            # when none does fall back to raw throughput (the vote/retry
+            # loop then carries the correction burden).
+            self._best_cfg_cache[key] = (best_ok or best)[1:]
         return self._best_cfg_cache[key]
 
     def _n_vec_rows(self, n_elems: int) -> int:
@@ -588,14 +621,19 @@ class PulsarEngine:
                     # Chained staging keeps one input resident per MAJ, so
                     # measure bank contention on the thinner command stream.
                     resident_inputs=1 if self.chained else 0)
-            self._batch_cache[key] = self.controller.batch_cost(unit,
-                                                                self.banks)
+            order = (tuple(self.reliability.bank_order(self.banks))
+                     if self.reliability is not None else None)
+            self._batch_cache[key] = self.controller.batch_cost(
+                unit, self.banks, bank_order=order)
         return self._batch_cache[key]
 
     def _charge(self, kind: str, n_elems: int, width: int | None = None,
                 n_planes: int | None = None) -> None:
         w = width or self.width
         m, n, sr, cost = self._cfg_for(kind, w, n_planes)
+        if self.reliability is not None:
+            # The flush-time vote loop injects at the worst config used.
+            self.reliability.note_op(m, n, sr)
         batch = (self._batch_for(kind, m, n)
                  if self.controller is not None else None)
         self.stats.charge(cost, self._n_vec_rows(n_elems), self.banks, sr,
@@ -794,9 +832,20 @@ class PulsarEngine:
                     self.counters.inc("engine.pipeline_cache.hit" if hit
                                       else "engine.pipeline_cache.miss")
                     sp_c.args["cache"] = "hit" if hit else "miss"
+            rel = self.reliability
             with tr.span("flush.dispatch", n_ops=len(program.ops),
-                         n_lanes=g.n):
-                outs = pipeline(*leaves)
+                         n_lanes=g.n) as sp_d:
+                if rel is not None and rel.inject:
+                    # Fault-injection hook: the pipeline runs once clean
+                    # (the eager oracle), then the reliability plane votes
+                    # over map-driven faulty replicas, retrying/escalating
+                    # on weak margins (repro.reliability.plane).
+                    voted = with_fault_injection(
+                        pipeline,
+                        lambda o: rel.correct(o, program, g.n, span=sp_d))
+                    outs = voted(*leaves)
+                else:
+                    outs = pipeline(*leaves)
         except BaseException:
             # Keep pending handles recoverable after a transient failure
             # (interrupt, backend OOM): restore the graph so a later

@@ -42,7 +42,9 @@ class HeartbeatMonitor:
                 st.step_times = st.step_times[-self.window:]
 
     def dead_workers(self, now: float | None = None) -> list[str]:
-        now = now or time.time()
+        # `now is None`, not truthiness: now=0.0 is a legitimate epoch in
+        # tests/replays and must not silently become the wall clock.
+        now = time.time() if now is None else now
         with self._lock:
             return [w for w, st in self.workers.items()
                     if now - st.last_beat > self.timeout_s]

@@ -487,6 +487,24 @@ def _cached_pipeline(program: FusedProgram, spec, interpret: bool,
     return spec.builder(program, interpret=interpret, donate=donate)
 
 
+def with_fault_injection(pipeline, injector):
+    """Fault-injection hook over a compiled pipeline.
+
+    ``injector(outs) -> outs`` receives the tuple of clean wire outputs
+    after each execution and returns the outputs to hand to the caller —
+    the reliability plane (``repro.reliability``) uses this to derive
+    fault-injected replicas from the clean run, majority-vote them, and
+    retry on weak margins. The wrapper is built per flush only when
+    injection is enabled, so the disabled path still calls the cached
+    pipeline directly (zero overhead, same object identity for the
+    pipeline cache).
+    """
+    def injected(*leaves):
+        return injector(pipeline(*leaves))
+
+    return injected
+
+
 def _donating(fn, n_leaves: int):
     """Wrap a jit'd pipeline so its leaf buffers are donated: operands are
     committed to the device first (donating raw NumPy args would fall back

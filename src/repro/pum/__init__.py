@@ -19,6 +19,13 @@ deprecated compat shim). Three pieces:
   Chrome trace-event JSON and populates ``Device.counters``; zero
   overhead (and zero behavior change) when not profiling. See
   ``docs/observability.md``.
+* reliability (:func:`calibrate`, :class:`ReliabilityMap`,
+  :class:`ReliabilityConfig`) — calibrate a simulated chip into a
+  per-bank/per-subarray/per-column map, then
+  ``EngineConfig(reliability=...)`` (or ``Device.calibrate()``) turns on
+  variation-aware replication planning, weak-column steering and —
+  opt-in — fault injection with replication-vote correction and retry
+  escalation. See ``docs/reliability.md``.
 
 See ``docs/api.md`` for the full surface, the Device lifecycle, the
 backend registry contract, and the old-call -> new-call migration table.
@@ -33,6 +40,7 @@ from repro.kernels.plane_layout import (LAYOUT32, LAYOUT64, PlaneLayout,
 from repro.pum.api import (Device, PumArray, as_device, asarray,
                            default_device, device, profile)
 from repro.pum.config import EngineConfig
+from repro.reliability import ReliabilityConfig, ReliabilityMap, calibrate
 from repro.telemetry import CounterBank, Tracer
 
 __all__ = [
@@ -45,10 +53,13 @@ __all__ = [
     "LAYOUT64",
     "PlaneLayout",
     "PumArray",
+    "ReliabilityConfig",
+    "ReliabilityMap",
     "Tracer",
     "as_device",
     "asarray",
     "available_backends",
+    "calibrate",
     "default_device",
     "device",
     "get_backend",

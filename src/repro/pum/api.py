@@ -85,7 +85,8 @@ class Device:
                 flush_memory_bytes=config.flush_memory_bytes,
                 donate_leaves=config.donate_leaves, layout=config.layout,
                 fused_backend=config.fused_backend,
-                ref_postponing=config.ref_postponing)
+                ref_postponing=config.ref_postponing,
+                reliability=config.reliability)
         self.engine = _engine
         self._scalars: dict[tuple, np.ndarray] = {}
 
@@ -124,8 +125,63 @@ class Device:
     def counters(self):
         """The engine's telemetry :class:`~repro.telemetry.CounterBank`
         (flush/pipeline-cache/auto-flush counters — populated only while
-        a tracer is attached, e.g. inside :func:`profile`)."""
+        a tracer is attached, e.g. inside :func:`profile`; the
+        ``reliability.*`` counters are recorded whenever the reliability
+        plane is active)."""
         return self.engine.counters
+
+    @property
+    def reliability(self):
+        """The engine's :class:`~repro.reliability.ReliabilityPlane`
+        (None unless configured or :meth:`calibrate`-attached)."""
+        return self.engine.reliability
+
+    def calibrate(self, *, inject: bool = False, attach: bool = True,
+                  n_subarrays: int = 4, n_columns: int = 256,
+                  n_patterns: int = 8, configs=None,
+                  process_variation: float | None = None,
+                  seed: int | None = None, save=None, **policy):
+        """Profile this device's simulated chip into a
+        :class:`~repro.reliability.ReliabilityMap` and (by default) attach
+        it: subsequent ops plan their fig-11 replication factor from the
+        calibrated per-bank/per-subarray success rates and placement
+        steers onto strong banks. With ``inject=True`` the flush-time
+        fault-injection + replication-vote/retry loop also turns on
+        (requires a fused device). Extra keyword ``policy`` fields
+        (``votes``, ``max_attempts``, ``min_margin``, ``target_success``,
+        ``steer``, ``flip_scale``, reliability ``seed``) go to the
+        :class:`~repro.reliability.ReliabilityConfig`.
+
+        Calibration is seeded from the device config (same device config
+        => bit-identical map in any process); ``save=`` persists the map
+        as ``.npz`` for reuse via
+        ``ReliabilityConfig(map="path.npz")``. The default profile sizes
+        are test-scale — production calibration passes larger
+        ``n_subarrays``/``n_columns``/``n_patterns``. Returns the map.
+        """
+        from repro.reliability import (ReliabilityConfig, ReliabilityPlane,
+                                       calibrate)
+        cfg = self.config
+        rmap = calibrate(
+            cfg.mfr, banks=cfg.banks, n_subarrays=n_subarrays,
+            n_columns=n_columns, n_patterns=n_patterns, configs=configs,
+            seed=cfg.seed if seed is None else seed,
+            process_variation=process_variation)
+        if save is not None:
+            rmap.save(save)
+        if attach:
+            if inject and not self.engine.fuse:
+                raise ValueError(
+                    "reliability fault injection hooks the fused dispatch "
+                    "path; this device runs eager (fuse=False)")
+            rcfg = ReliabilityConfig(map=rmap, inject=inject, **policy)
+            self.engine.reliability = ReliabilityPlane(
+                rcfg, mfr=cfg.mfr, counters=self.engine.counters)
+            # Planning/placement caches were computed without the map.
+            self.engine._best_cfg_cache.clear()
+            self.engine._batch_cache.clear()
+            self.config = cfg.replace(reliability=rcfg)
+        return rmap
 
     def reset_stats(self) -> None:
         self.engine.reset_stats()
@@ -481,6 +537,8 @@ def as_device(obj) -> Device:
             flush_memory_bytes=obj.flush_memory_bytes,
             donate_leaves=obj.donate_leaves, success_db=obj.db,
             layout=obj.layout, fused_backend=obj.fused_backend,
-            ref_postponing=obj.ref_postponing)
+            ref_postponing=obj.ref_postponing,
+            reliability=(None if obj.reliability is None
+                         else obj.reliability.config))
         return Device(cfg, _engine=obj)
     raise TypeError(f"cannot interpret {type(obj).__name__} as a Device")

@@ -48,6 +48,13 @@ class EngineConfig:
       bit-identical either way.
     * ``success_db`` — optional ``SuccessRateDb`` override for the
       characterization data (tests/sensitivity sweeps).
+    * ``reliability`` — ``None`` (default: every path unchanged), or a
+      ``repro.reliability.ReliabilityConfig`` / calibrated
+      ``ReliabilityMap`` (= config with defaults): the engine plans
+      replication per op from the map, steers placement onto strong
+      banks/subarrays, and — when the config sets ``inject=True`` — runs
+      the flush-time fault-injection + replication-vote/retry loop
+      (requires ``fuse=True``; see docs/reliability.md).
     """
 
     mfr: str = "M"
@@ -67,6 +74,7 @@ class EngineConfig:
     layout: Any = None
     fused_backend: str | None = None
     ref_postponing: int = 1
+    reliability: Any = None
 
     def __post_init__(self):
         if not 1 <= self.width <= 64:

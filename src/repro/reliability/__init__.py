@@ -1,0 +1,26 @@
+"""repro.reliability — the closed reliability loop (see docs/reliability.md).
+
+Calibrate a simulated chip into a persistent per-bank/per-subarray/
+per-column :class:`ReliabilityMap`, then hand it to a device via
+``pum.EngineConfig(reliability=ReliabilityConfig(map=..., inject=True))``:
+planning picks the fig-11 replication factor per operation from the map,
+placement steers row groups onto strong banks/subarrays, and execution
+corrects injected faults by temporal replication voting with bounded retry
+escalation (degrading to the eager oracle as a last resort).
+"""
+
+from repro.reliability.calibration import (DEFAULT_CONFIGS, P_STABLE,
+                                           ReliabilityMap, calibrate)
+from repro.reliability.faults import FaultInjector, majority_vote
+from repro.reliability.plane import ReliabilityConfig, ReliabilityPlane
+
+__all__ = [
+    "DEFAULT_CONFIGS",
+    "P_STABLE",
+    "FaultInjector",
+    "ReliabilityConfig",
+    "ReliabilityMap",
+    "ReliabilityPlane",
+    "calibrate",
+    "majority_vote",
+]

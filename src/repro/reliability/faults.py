@@ -1,0 +1,92 @@
+"""Fault injection: map-driven bit flips on fused-pipeline outputs.
+
+The injector turns a :class:`~repro.reliability.calibration.ReliabilityMap`
+into concrete bit-flip masks for one fused program execution:
+
+* each dataplane lane lives in one *column* of one (bank, subarray) home —
+  lanes tile across homes in ``n_columns``-sized chunks, in calibration
+  order or (with steering) ranked best-first;
+* a lane's per-execution flip probability is ``1 - (1 - p_col)^n_ops`` —
+  the column is exercised once per row-group op of the program;
+* a faulting lane flips ONE uniformly chosen bit of its word (a sense-amp
+  resolving the wrong way corrupts a single cell's readout).
+
+All randomness is ``np.random.default_rng`` seeded from explicit integer
+tuples, so a given (seed, flush, attempt, vote, output) always produces the
+same mask in any process — the retry loop and the tests rely on that.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.reliability.calibration import ReliabilityMap
+
+
+class FaultInjector:
+    """Per-column fault model for one replication config of a map."""
+
+    def __init__(self, rmap: ReliabilityMap, cfg_idx: int, *, width: int,
+                 n_ops: int = 1, steer: bool = True,
+                 flip_scale: float = 1.0):
+        self.rmap = rmap
+        self.cfg_idx = cfg_idx
+        self.width = width
+        self.n_ops = max(1, int(n_ops))
+        self.flip_scale = float(flip_scale)
+        if steer:
+            self.homes = rmap.home_order(cfg_idx)
+        else:
+            self.homes = [(b, s) for b in range(rmap.n_banks)
+                          for s in range(rmap.n_subarrays)]
+
+    def lane_probs(self, n_lanes: int) -> np.ndarray:
+        """Per-lane flip probability for one program execution."""
+        nc = self.rmap.n_columns
+        nh = len(self.homes)
+        p = np.empty(n_lanes, np.float64)
+        for k in range(0, n_lanes, nc):
+            b, s = self.homes[(k // nc) % nh]
+            cols = self.rmap.flip_p[b, s, self.cfg_idx]
+            take = min(nc, n_lanes - k)
+            p[k:k + take] = cols[:take]
+        p = np.clip(p * self.flip_scale, 0.0, 1.0)
+        return 1.0 - (1.0 - p) ** self.n_ops
+
+    def sample_mask(self, rng: np.random.Generator, p_eff: np.ndarray,
+                    dtype: np.dtype) -> tuple[np.ndarray, int]:
+        """One execution's flip mask (lane-dtype, XOR onto clean lanes) and
+        the number of injected bits."""
+        n = p_eff.shape[0]
+        flips = rng.random(n) < p_eff
+        bits = rng.integers(0, self.width, n).astype(dtype)
+        one = np.ones(n, dtype)
+        mask = np.where(flips, np.left_shift(one, bits),
+                        np.zeros(n, dtype))
+        return mask, int(flips.sum())
+
+
+def majority_vote(replicas: np.ndarray, width: int, min_margin: int
+                  ) -> tuple[np.ndarray, int, int]:
+    """Bitwise majority over ``replicas [R, n]`` (unsigned lane words).
+
+    Returns ``(majority, corrected_bits, weak_bits)``:
+
+    * ``corrected_bits`` — bit positions where a minority of replicas
+      disagreed and was outvoted;
+    * ``weak_bits`` — disagreeing bits whose vote margin ``|2s - R|`` fell
+      below ``min_margin`` (too close to trust: the caller retries).
+    """
+    r, _ = replicas.shape
+    dtype = replicas.dtype
+    one = dtype.type(1)
+    maj = np.zeros(replicas.shape[1], dtype)
+    corrected = 0
+    weak = 0
+    for b in range(width):
+        s = ((replicas >> dtype.type(b)) & one).astype(np.int64).sum(axis=0)
+        maj |= (2 * s > r).astype(dtype) << dtype.type(b)
+        dis = (s > 0) & (s < r)
+        corrected += int(dis.sum())
+        weak += int((dis & (np.abs(2 * s - r) < min_margin)).sum())
+    return maj, corrected, weak

@@ -1,0 +1,72 @@
+"""Property tests for the fig-10 replication planner invariants."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from repro.testing import given, settings, st
+
+from repro.core.replication import fracdram_plan, plan, plan_pow2
+
+ODD_M = st.sampled_from([3, 5, 7, 9])
+N_RG = st.integers(min_value=3, max_value=64)
+
+
+@settings(max_examples=50)
+@given(m=ODD_M, n=N_RG)
+def test_plan_partitions_all_rows(m, n):
+    if n < m:
+        with pytest.raises(ValueError):
+            plan(m, n)
+        return
+    p = plan(m, n)
+    assert p.copies * p.m_inputs + p.n_neutral == p.n_rg == n
+    assert p.copies >= 1 and p.n_neutral >= 0
+    # Odd fan-in with equal copies never ties: net votes >= copies >= 1.
+    assert p.worst_case_net_votes == p.copies >= 1
+    slots = p.row_assignment()
+    assert len(slots) == n
+    assert all(slots.count(i) == p.copies for i in range(m))
+    assert slots.count(-1) == p.n_neutral
+
+
+@settings(max_examples=50)
+@given(m=ODD_M, n=N_RG)
+def test_plan_pow2_copies_are_powers_of_two(m, n):
+    if n < m:
+        with pytest.raises(ValueError):
+            plan_pow2(m, n)
+        return
+    p = plan_pow2(m, n)
+    assert p.copies * p.m_inputs + p.n_neutral == p.n_rg == n
+    assert p.copies >= 1
+    assert p.copies & (p.copies - 1) == 0  # power of two
+    # Rounded DOWN from the maximal plan, never past it.
+    assert p.copies <= plan(m, n).copies < 2 * p.copies
+
+
+@settings(max_examples=20)
+@given(m=ODD_M, n=N_RG)
+def test_plan_is_maximal(m, n):
+    if n < m:
+        return
+    p = plan(m, n)
+    # Maximal replication: one more copy per input would not fit.
+    assert (p.copies + 1) * m > n
+
+
+@given(m=st.sampled_from([2, 4, 6]), n=st.integers(min_value=8,
+                                                   max_value=32))
+def test_even_fan_in_rejected(m, n):
+    with pytest.raises(ValueError):
+        plan(m, n)
+    with pytest.raises(ValueError):
+        plan_pow2(m, n)
+
+
+def test_fracdram_plan_shape():
+    p = fracdram_plan()
+    assert (p.m_inputs, p.n_rg, p.copies, p.n_neutral) == (3, 4, 1, 1)
+    p5 = fracdram_plan(5)
+    assert p5.n_rg == 6 and p5.copies == 1 and p5.n_neutral == 1

@@ -1,0 +1,97 @@
+"""HeartbeatMonitor / Supervisor / elastic-mesh planning."""
+
+import pytest
+
+from repro.distributed.fault_tolerance import (HeartbeatMonitor, Supervisor,
+                                               WorkerState, plan_elastic_mesh)
+
+
+def test_dead_workers_timeout_path():
+    mon = HeartbeatMonitor(timeout_s=5.0)
+    mon.workers["w0"] = WorkerState(last_beat=0.0)
+    mon.workers["w1"] = WorkerState(last_beat=8.0)
+    assert mon.dead_workers(now=10.0) == ["w0"]
+    assert mon.dead_workers(now=20.0) == ["w0", "w1"]
+
+
+def test_dead_workers_epoch_zero_regression():
+    """now=0.0 is a legitimate replay epoch and must not be coerced to the
+    wall clock (the old `now or time.time()` truthiness bug would flag a
+    worker whose last beat was at t=100 as alive-forever — or dead —
+    depending on the real clock)."""
+    mon = HeartbeatMonitor(timeout_s=5.0)
+    mon.workers["w0"] = WorkerState(last_beat=100.0)
+    assert mon.dead_workers(now=0.0) == []
+    mon.workers["w1"] = WorkerState(last_beat=-10.0)
+    assert mon.dead_workers(now=0.0) == ["w1"]
+
+
+def test_beat_revives_and_tracks_step_times():
+    mon = HeartbeatMonitor(timeout_s=5.0, window=3)
+    mon.beat("w0", step_time_s=1.0)
+    assert mon.dead_workers() == []
+    for t in (2.0, 3.0, 4.0):
+        mon.beat("w0", step_time_s=t)
+    # Sliding window keeps only the newest `window` samples.
+    assert mon.workers["w0"].step_times == [2.0, 3.0, 4.0]
+
+
+def test_stragglers_need_three_reporting_workers():
+    mon = HeartbeatMonitor()
+    mon.beat("w0", step_time_s=1.0)
+    mon.beat("w1", step_time_s=50.0)
+    assert mon.stragglers() == []  # too few workers for a robust median
+
+
+def test_stragglers_flagged_against_median():
+    mon = HeartbeatMonitor(straggler_factor=2.0)
+    for w in ("w0", "w1", "w2"):
+        for t in (1.0, 1.1, 0.9):
+            mon.beat(w, step_time_s=t)
+    assert mon.stragglers() == []
+    for t in (4.0, 4.0, 4.0):
+        mon.beat("w2", step_time_s=t)
+    assert mon.stragglers() == ["w2"]
+
+
+def test_stragglers_ignore_workers_without_step_times():
+    """A worker that only heartbeats (empty step-time window) must not
+    poison the median with a divide-by-zero or a phantom zero mean."""
+    mon = HeartbeatMonitor(straggler_factor=2.0)
+    mon.beat("idle")  # beats, never reports a step time
+    for w in ("w0", "w1", "w2"):
+        mon.beat(w, step_time_s=1.0)
+    mon.beat("w2", step_time_s=9.0)
+    assert mon.stragglers() == ["w2"]
+
+
+def test_plan_elastic_mesh_shrinks_data_axis():
+    assert plan_elastic_mesh(16, 4) == (4, 4)
+    assert plan_elastic_mesh(15, 4) == (3, 4)  # lost a node: DP shrinks
+    assert plan_elastic_mesh(4, 4) == (1, 4)
+    with pytest.raises(RuntimeError):
+        plan_elastic_mesh(3, 4)  # TP degree no longer fits
+
+
+def test_supervisor_clean_exit():
+    sup = Supervisor(["-c", "raise SystemExit(0)"], max_restarts=2)
+    assert sup.run() == 0
+    assert sup.restarts == 0
+
+
+def test_supervisor_restarts_then_gives_up():
+    sup = Supervisor(["-c", "raise SystemExit(7)"], max_restarts=2)
+    assert sup.run() == 7
+    # Initial attempt + max_restarts relaunches, all failed.
+    assert sup.restarts == sup.max_restarts + 1
+
+
+def test_supervisor_recovers_after_transient_failure(tmp_path):
+    """First launch crashes, relaunch (simulated restored checkpoint via a
+    marker file) succeeds: the supervisor reports success."""
+    marker = tmp_path / "ckpt"
+    code = (f"import pathlib,sys; p=pathlib.Path({str(marker)!r});\n"
+            "sys.exit(0) if p.exists() else (p.touch(), sys.exit(1))")
+    sup = Supervisor(["-c", code], max_restarts=3)
+    assert sup.run() == 0
+    assert sup.restarts == 1

@@ -1,0 +1,145 @@
+"""Calibration pass + ReliabilityMap: determinism, spatial structure,
+persistence, and the planning queries the engine consumes."""
+
+import numpy as np
+import pytest
+
+from repro.core import analog
+from repro.core.profiles import PROFILES
+from repro.core.replication import plan as replication_plan
+from repro.reliability import P_STABLE, ReliabilityMap, calibrate
+
+PV_M = PROFILES["M"].process_variation
+
+
+def small_map(**kw):
+    args = dict(mfr="M", banks=4, n_subarrays=4, n_columns=64, n_patterns=4,
+                seed=13)
+    args.update(kw)
+    return calibrate(args.pop("mfr"), **args)
+
+
+def test_calibrate_is_deterministic():
+    a = small_map()
+    b = small_map()
+    assert a.configs == b.configs
+    np.testing.assert_array_equal(a.success, b.success)
+    np.testing.assert_array_equal(a.flip_p, b.flip_p)
+    np.testing.assert_array_equal(a.bank_scale, b.bank_scale)
+
+
+def test_calibrate_seed_changes_map():
+    a = small_map()
+    b = small_map(seed=14)
+    assert not np.array_equal(a.flip_p, b.flip_p)
+
+
+def test_configs_respect_manufacturer_caps():
+    m = small_map()  # Mfr M: max 16 rows, MAJ fan-in <= 7
+    assert all(n <= 16 for _, n in m.configs)
+    h = small_map(mfr="H", banks=2)  # Mfr H: 32 rows
+    assert (3, 32) in h.configs
+    assert all(mi <= PROFILES["H"].max_maj_fan_in for mi, _ in h.configs)
+
+
+def test_replication_lifts_success():
+    """Fig 11: more input replication (larger N_RG at fixed fan-in) must
+    not lower the chip-wide success rate at elevated variation."""
+    m = small_map(process_variation=PV_M * 3)
+    s8 = m.mean_success(3, 8)
+    s16 = m.mean_success(3, 16)
+    assert s16 >= s8
+    assert m.mean_success(5, 16) >= m.mean_success(5, 8)
+
+
+def test_w_shaped_spatial_profile():
+    """charact.spatial_pv_multiplier peaks at subarrays 0,3,4,7 (of 8) —
+    those subarrays see more variation, so calibrated success is lower."""
+    m = calibrate("M", banks=4, n_subarrays=8, n_columns=64, n_patterns=4,
+                  seed=3, process_variation=PV_M * 3)
+    per_sub = m.success.mean(axis=(0, 2))  # [n_subarrays]
+    weak = per_sub[[0, 3, 4, 7]].mean()
+    strong = per_sub[[1, 2, 5, 6]].mean()
+    assert weak < strong
+
+
+def test_save_load_roundtrip(tmp_path):
+    m = small_map()
+    path = tmp_path / "chip.npz"
+    m.save(path)
+    back = ReliabilityMap.load(path)
+    assert back.mfr == m.mfr and back.seed == m.seed
+    assert back.configs == m.configs
+    np.testing.assert_array_equal(back.success, m.success)
+    np.testing.assert_array_equal(back.flip_p, m.flip_p)
+    np.testing.assert_array_equal(back.bank_scale, m.bank_scale)
+
+
+def test_config_index_and_nearest():
+    m = small_map()
+    i = m.config_index(3, 16)
+    assert m.configs[i] == (3, 16)
+    assert m.config_index(3, 12) is None
+    assert m.configs[m.nearest_config(3, 12)] == (3, 16)  # ties go larger
+    assert m.configs[m.nearest_config(9, 16)][1] == 16
+
+
+def test_escalation_ladder_saturates():
+    m = small_map()
+    base = m.config_index(3, 4)
+    ns = [m.configs[m.escalated_config(base, k)][1] for k in range(5)]
+    assert ns == sorted(ns)            # monotone toward more rows
+    assert ns[0] == 4 and ns[-1] == 16  # starts at base, saturates at cap
+    top = m.config_index(3, 16)
+    assert m.escalated_config(top, 1) == top
+
+
+def test_best_plan_meets_target_or_most_reliable():
+    m = small_map(process_variation=PV_M * 3)
+    rp, sr = m.best_plan(3, target_success=0.5)
+    assert rp == replication_plan(3, rp.n_rg)
+    assert sr >= 0.5
+    # Impossible target: falls back to the most reliable profiled config.
+    rp2, sr2 = m.best_plan(3, target_success=1.1)
+    cands = [m.mean_success(3, n) for mm, n in m.configs if mm == 3]
+    assert sr2 == max(cands)
+    with pytest.raises(ValueError):
+        m.best_plan(9, target_success=0.9)
+
+
+def test_home_and_bank_order_are_ranked_permutations():
+    m = small_map(process_variation=PV_M * 3)
+    i = m.config_index(3, 4)
+    homes = m.home_order(i)
+    assert sorted(homes) == [(b, s) for b in range(4) for s in range(4)]
+    sr = [m.success[b, s, i] for b, s in homes]
+    assert sr == sorted(sr, reverse=True)
+    order = m.bank_order()
+    assert sorted(order) == list(range(4))
+    means = m.success.mean(axis=(1, 2))
+    assert [means[b] for b in order] == sorted(means, reverse=True)
+
+
+def test_column_flip_probs_matches_success_rate():
+    """The per-column characterization shares the Monte-Carlo margins with
+    maj_success_rate: identical rate and stable mask for identical args."""
+    import jax
+
+    key = jax.random.PRNGKey(42)
+    prof = PROFILES["M"]
+    kw = dict(m_inputs=3, copies=5, n_neutral=1, n_bitlines=256,
+              n_patterns=8, process_variation=PV_M * 3)
+    rate, stable = analog.maj_success_rate(key, prof, **kw)
+    cp = analog.column_flip_probs(key, prof, **kw)
+    assert cp.rate == rate
+    np.testing.assert_array_equal(cp.stable, np.asarray(stable))
+    # Stability threshold consistency: stable columns sit below P_STABLE.
+    assert (cp.flip_p[cp.stable] <= P_STABLE * (1 + 1e-6)).all()
+    assert cp.flip_p.min() >= 0.0 and cp.flip_p.max() <= 1.0
+
+
+def test_weak_column_frac_complements_success():
+    m = small_map(process_variation=PV_M * 3)
+    for i in range(len(m.configs)):
+        assert m.weak_column_frac(i) == pytest.approx(
+            1.0 - m.success[:, :, i].mean(), abs=1e-6)

@@ -23,9 +23,9 @@ EXPECTED = {
     "repro.pum": [
         "BackendSpec", "CounterBank", "Device", "EngineConfig",
         "EngineStats", "LAYOUT32", "LAYOUT64", "PlaneLayout", "PumArray",
-        "Tracer",
-        "as_device", "asarray", "available_backends", "default_device",
-        "device", "get_backend", "get_layout", "profile",
+        "ReliabilityConfig", "ReliabilityMap", "Tracer",
+        "as_device", "asarray", "available_backends", "calibrate",
+        "default_device", "device", "get_backend", "get_layout", "profile",
         "register_backend", "select_backend", "unregister_backend",
     ],
     "PumArray": [
@@ -41,13 +41,13 @@ EXPECTED = {
     ],
     "Device": [
         "__enter__", "__exit__", "__init__", "__repr__", "asarray",
-        "charge", "counters", "flush", "latency_ms", "layout",
-        "reset_stats", "stats", "width",
+        "calibrate", "charge", "counters", "flush", "latency_ms", "layout",
+        "reliability", "reset_stats", "stats", "width",
     ],
     "EngineConfig": [
         "backend", "banks", "chained", "controller", "donate_leaves",
         "flush_memory_bytes", "flush_threshold", "fuse", "fused_backend",
-        "layout", "mfr", "ref_postponing", "row_bits",
+        "layout", "mfr", "ref_postponing", "reliability", "row_bits",
         "seed", "success_db", "use_pulsar", "width",
     ],
     # Built-in registrations (a superset is allowed: registering more
