@@ -59,6 +59,27 @@ def run() -> list[Row]:
         # baseline (bus utilization, row hits, tRRD/tFAW stalls).
         record_counters(f"bankpar.ctrl_b{banks}", tr.counters())
 
+    # 8 concurrent client streams through the crossbar: each port owns a
+    # slice of the 16 banks, the multiplexer still enforces rank-wide
+    # tFAW/tRRD — overlap is makespan vs the sum of per-stream serial
+    # schedules, and the replayed audit trail must be violation-free.
+    from repro.telemetry import check_timing_invariants
+    n_ports = 8
+    ctrl = MemoryController(n_banks=16)
+    streams = [[retarget_program(prog, (i * n_ports + p) % 16)
+                for i in range(N_OPS // n_ports) for prog in unit]
+               for p in range(n_ports)]
+    us, tr = timed_us(ctrl.schedule_concurrent, streams, repeat=1)
+    serial_ns = sum(ctrl.schedule(s).total_ns for s in streams)
+    viol = len(check_timing_invariants(tr))
+    rows.append(row(
+        "engine.crossbar_8client", us,
+        f"makespan={tr.total_ns:.0f}ns serial_sum={serial_ns:.0f}ns "
+        f"overlap={serial_ns / tr.total_ns:.2f}x "
+        f"violations={viol} refreshes={tr.n_refreshes} "
+        f"({n_ports} client ports, per-bank round-robin grants)"))
+    record_counters("engine.crossbar_8client", tr.counters())
+
     # REF postponing sweep: batch_cost prices the same 16-bank MAJ unit
     # under each policy — refresh_factor is the steady-state slowdown the
     # engine multiplies into every op's latency.

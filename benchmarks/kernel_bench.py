@@ -213,6 +213,52 @@ def _bench_sharded_prog16() -> list[Row]:
     ]
 
 
+def _bench_async_flush() -> list[Row]:
+    """Async flush: caller-thread cost of record + ``flush_async`` submit
+    vs the full synchronous flush for the same 16-op program — the
+    compile/dispatch/materialize pipeline runs on the worker, so the
+    caller-visible latency is the off-thread win."""
+    import time
+
+    rng = np.random.default_rng(23)
+    n = 32 * W
+    a, b, c = (rng.integers(0, 2**32, n, dtype=np.uint64) for _ in range(3))
+    dev = pum.device(width=32, fuse=True)
+    ref_out = _engine_prog16(dev, a, b, c).to_numpy()  # warm-up compile
+
+    def run_sync():
+        out = _engine_prog16(dev, a, b, c)
+        dev.flush()
+        return out
+
+    us_sync, out = timed_us(run_sync, repeat=7)
+    ok = bool(np.array_equal(out.to_numpy(), ref_out))
+
+    # Caller-side submit latency, one flush in flight at a time (drain
+    # between repeats so the double-buffer semaphore never backpressures
+    # the timed section).
+    best = float("inf")
+    for _ in range(7):
+        t0 = time.perf_counter()
+        out = _engine_prog16(dev, a, b, c)
+        h = dev.flush_async()
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+        h.result()
+        ok = ok and bool(np.array_equal(out.to_numpy(), ref_out))
+    us_submit = best
+    with pum.profile(dev):
+        _engine_prog16(dev, a, b, c)
+        dev.flush_async().result()
+    record_counters("engine.async_flush", dev.counters)
+    dev.close()
+    return [
+        row("engine.async_flush", us_submit,
+            f"caller submit {us_submit:.0f}us vs {us_sync:.0f}us sync "
+            f"flush ({us_sync / max(us_submit, 1e-9):.1f}x of the flush "
+            f"latency moved off the caller thread; bit_exact={ok})"),
+    ]
+
+
 def _bench_app_kernels() -> list[Row]:
     """realworld packed-bitmap kernels, eager vs fused routing (the raw
     planewise path): host wall time of the whole kernel call; each call
@@ -289,5 +335,6 @@ def run() -> list[Row]:
     rows.extend(_bench_fused_mul())
     rows.extend(_bench_fused_mul64())
     rows.extend(_bench_sharded_prog16())
+    rows.extend(_bench_async_flush())
     rows.extend(_bench_app_kernels())
     return rows

@@ -13,16 +13,21 @@ Discrete-event analogue of a LiteDRAM/gram-style controller:
   * :class:`~repro.controller.controller.MemoryController` — the facade:
     accepts ``Cmd`` programs tagged with target banks and returns a
     cycle-accounted, ``ScheduleResult``-compatible trace.
+  * :class:`~repro.controller.crossbar.Crossbar` — N client ports feeding
+    the bank machines through a lookahead feeder with per-bank round-robin
+    grants (LiteDRAM crossbar analogue); ``CrossbarTrace`` attributes every
+    issued command back to its port for post-hoc fairness audits.
 """
 
 from repro.controller.bank_machine import BankMachine, BankState
 from repro.controller.controller import (BankBatchCost, ControllerTrace,
                                          MemoryController, retarget_program)
+from repro.controller.crossbar import ClientPort, Crossbar, CrossbarTrace
 from repro.controller.multiplexer import CommandMultiplexer
 from repro.controller.refresher import Refresher
 
 __all__ = [
     "BankMachine", "BankState", "CommandMultiplexer", "Refresher",
     "MemoryController", "ControllerTrace", "BankBatchCost",
-    "retarget_program",
+    "retarget_program", "Crossbar", "ClientPort", "CrossbarTrace",
 ]

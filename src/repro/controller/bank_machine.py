@@ -81,8 +81,16 @@ class BankMachine:
         return sid
 
     def enqueue_access(self, row: int, write: bool = False,
-                       n_bursts: int = 1) -> int:
-        """Nominal row access under the precharge policy (row hit/miss)."""
+                       n_bursts: int = 1,
+                       auto_precharge: bool | None = None) -> int:
+        """Nominal row access under the precharge policy (row hit/miss).
+
+        ``auto_precharge`` overrides the machine-level page policy for this
+        one access: ``True`` appends a closing PRE (closed-page), ``False``
+        leaves the row open, ``None`` (default) follows ``self.open_page``.
+        The crossbar uses this for lookahead-driven auto-precharge — when
+        the next queued request for the bank targets a different row, the
+        PRE rides along with this access instead of costing a conflict."""
         t = self.t
         col = Op.WR if write else Op.RD
         prog: list[Cmd] = []
@@ -104,7 +112,9 @@ class BankMachine:
         prog.append(Cmd(col, self.bank, row, first_gap, "bm.col0"))
         for i in range(1, n_bursts):
             prog.append(Cmd(col, self.bank, row, t.tccd_l, f"bm.col{i}"))
-        if not self.open_page:                          # closed-page policy
+        closed = ((not self.open_page) if auto_precharge is None
+                  else auto_precharge)
+        if closed:                                      # closed-page policy
             tail = t.twr if write else t.trtp + t.tbl
             prog.append(Cmd(Op.PRE, self.bank, -1, tail, "bm.prea"))
         return self.enqueue_program(prog)

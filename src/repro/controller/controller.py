@@ -168,6 +168,32 @@ class MemoryController:
                     progs.append(retarget_program(prog, b))
         return self.schedule(progs, refresh=refresh)
 
+    def schedule_concurrent(self, streams, lookahead: int = 8,
+                            auto_precharge: bool = False,
+                            refresh: bool | None = None):
+        """Schedule N concurrent client streams through the crossbar.
+
+        ``streams`` is a list of per-client program lists (each program a
+        single-bank ``list[Cmd]``, same contract as :meth:`schedule`).
+        One :class:`~repro.controller.crossbar.ClientPort` is opened per
+        stream; ports contending for a bank are granted round-robin with
+        at most ``lookahead`` pending sequences per bank machine.  Returns
+        a :class:`~repro.controller.crossbar.CrossbarTrace` whose
+        ``port_of`` attributes every issued command to its client.
+
+        With a single stream this is byte-for-byte :meth:`schedule`
+        (pinned by the golden-trace tests)."""
+        from repro.controller.crossbar import Crossbar
+        xbar = Crossbar(timings=self.t, n_banks=self.n_banks,
+                        n_ports=max(1, len(streams)), lookahead=lookahead,
+                        auto_precharge=auto_precharge, refresh=self.refresh,
+                        trefi=self.trefi, trfc=self.trfc,
+                        postponing=self.postponing,
+                        open_page=self.open_page)
+        for i, progs in enumerate(streams):
+            xbar.port(i).submit(progs)
+        return xbar.run(refresh=refresh)
+
     # ------------------------------------------------------------------ #
     # Cost-plane entry point
     # ------------------------------------------------------------------ #

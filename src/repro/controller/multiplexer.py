@@ -42,6 +42,11 @@ class MuxResult:
     per_bank_last: dict[int, float]
     # Timing set the arbitration ran under (for ``.counters()`` derivation).
     timings: DramTimings | None = None
+    # Parallel to ``events``: (bank, seq_id) of the sequence each command
+    # belongs to, so a crossbar can attribute issued commands back to the
+    # client port that submitted the sequence (pure audit metadata — the
+    # arbitration itself never reads it).
+    seqs: list[tuple[int, int]] | None = None
 
     @property
     def total_ns(self) -> float:
@@ -58,10 +63,16 @@ class MuxResult:
 
 class CommandMultiplexer:
     def __init__(self, timings: DramTimings, machines: list[BankMachine],
-                 refresher: Refresher | None = None):
+                 refresher: Refresher | None = None, feeder=None):
         self.t = timings
         self.machines = machines
         self.refresher = refresher
+        # Optional refill hook called at the top of every arbitration step
+        # (before the bank-machine scan).  A crossbar uses it to top the
+        # per-bank queues up to its lookahead depth from the client ports;
+        # with ``feeder=None`` the loop below is byte-identical to the
+        # pre-crossbar multiplexer.
+        self.feeder = feeder
 
     # ------------------------------------------------------------------ #
 
@@ -94,8 +105,13 @@ class CommandMultiplexer:
         rr = 0
         nb = len(self.machines)
         refresh_stall = 0.0
+        seqs: list[tuple[int, int]] = []
 
-        while any(len(bm) for bm in self.machines):
+        while True:
+            if self.feeder is not None:
+                self.feeder()
+            if not any(len(bm) for bm in self.machines):
+                break
             best_idx = -1
             best_time = float("inf")
             blocked = False
@@ -131,6 +147,7 @@ class CommandMultiplexer:
             q = bm.issue(best_time)
             cmd = q.cmd
             events.append((cmd, best_time))
+            seqs.append((bm.bank, q.seq_id))
             if cmd.op is Op.ACT:
                 if len(faw) >= 4:
                     faw.popleft()
@@ -156,4 +173,4 @@ class CommandMultiplexer:
                          refresh_windows=list(ref.windows) if ref else [],
                          n_refreshes=ref.n_refreshes if ref else 0,
                          refresh_stall_ns=refresh_stall,
-                         per_bank_last=per_bank, timings=t)
+                         per_bank_last=per_bank, timings=t, seqs=seqs)

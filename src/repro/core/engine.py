@@ -67,10 +67,13 @@ multi-device ``"shard-words"`` pipeline).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
 import warnings
 import weakref
+from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
@@ -156,6 +159,38 @@ class EngineStats:
         self.lane_efficiency = min(self.lane_efficiency, success)
 
 
+class FlushHandle:
+    """Future-like handle for one :meth:`PulsarEngine.flush_async`.
+
+    ``result()`` blocks until the dispatched graph(s) materialize (after
+    which every LazyArray the flush covered holds its value) and re-raises
+    the flush error on failure — a failed async flush parks its graph for
+    retry exactly like a failed synchronous ``flush()``, so a later
+    ``flush()``/``materialize()`` recovers the pending handles."""
+
+    __slots__ = ("_future",)
+
+    def __init__(self, future=None):
+        self._future = future  # None => the flush had nothing to dispatch
+
+    def done(self) -> bool:
+        return self._future is None or self._future.done()
+
+    def result(self, timeout: float | None = None) -> None:
+        """Wait for the dispatch; re-raises the flush failure, if any."""
+        if self._future is not None:
+            self._future.result(timeout)
+
+    def exception(self, timeout: float | None = None):
+        if self._future is None:
+            return None
+        return self._future.exception(timeout)
+
+    def __repr__(self) -> str:
+        state = "done" if self.done() else "in-flight"
+        return f"FlushHandle({state})"
+
+
 class LazyArray:
     """Handle for a value pending in the engine's fused op graph.
 
@@ -192,7 +227,15 @@ class LazyArray:
 
     def materialize(self) -> np.ndarray:
         if self._value is None:
-            self._engine.flush()
+            g, eng = self._graph, self._engine
+            if g is not None and eng is not None:
+                # Route to the owning graph: it may belong to another
+                # client context, sit on the retry list after a failed
+                # flush, or be in flight on the async flush worker — the
+                # engine dispatches or waits as appropriate.
+                eng._materialize_graph(g)
+            elif eng is not None:
+                eng.flush()
         if self._value is None:
             raise RuntimeError(
                 "LazyArray failed to materialize: the engine flush that "
@@ -264,6 +307,12 @@ class _OpGraph:
         # perf_counter_ns at first recorded op — set only when a tracer is
         # attached, so flush() can emit the "flush.record" span.
         self.t_start: int | None = None
+        # Flush lifecycle (guarded by the engine lock): "recording" in a
+        # client context's slot, "queued" parked on the retry list after a
+        # failed flush, "flushing" detached and being dispatched (``done``
+        # is then an Event concurrent materializers wait on), "done".
+        self.state: str = "recording"
+        self.done: threading.Event | None = None
 
     def leaf_id(self, arr: np.ndarray) -> tuple[str, int]:
         """Register an operand, snapshotting its content (mod the layout
@@ -408,7 +457,20 @@ class PulsarEngine:
         self.ref_postponing = ref_postponing
         self.cost = CostModel(row_bits=row_bits, controller=controller)
         self.db = success_db or default_db()
-        self.stats = EngineStats()
+        # Concurrency state: one recording slot + one EngineStats shard
+        # per client context (a thread, or a named ``client()`` scope).
+        # The RLock guards all record-side mutation (slots, shards, cost
+        # caches, retry list); compiled-pipeline dispatch runs outside it.
+        self._lock = threading.RLock()
+        self._local = threading.local()
+        self._slots: dict[tuple, _OpGraph] = {}
+        self._stats_shards: dict[tuple, EngineStats] = {}
+        self._retry: list[_OpGraph] = []       # failed flushes, FIFO
+        self._inflight: dict[int, object] = {}  # id(graph) -> Future
+        self._executor: ThreadPoolExecutor | None = None
+        # Double-buffered async flush: at most 2 staged dispatches in
+        # flight — the caller stages flush k+1 while the worker runs k.
+        self._async_slots = threading.BoundedSemaphore(2)
         self._best_cfg_cache: dict[int, tuple[int, int, float]] = {}
         self._batch_cache: dict[tuple, object] = {}
         # Eager-dataplane backend by registry lookup: the builder returns
@@ -468,7 +530,6 @@ class PulsarEngine:
         self.flush_threshold = flush_threshold
         self.flush_memory_bytes = flush_memory_bytes
         self.donate_leaves = donate_leaves
-        self._graph: _OpGraph | None = None
         # Telemetry: counters always exist (cheap dict, written only while
         # a tracer is attached); ``tracer`` is None until someone opts in
         # (pum.profile(), ServeEngine(telemetry=True)) — the disabled path
@@ -489,6 +550,72 @@ class PulsarEngine:
                     "reliability fault injection hooks the fused dispatch "
                     "path; it requires fuse=True (eager ops never run the "
                     "vote/retry loop)")
+
+    # ------------------------------------------------------------------ #
+    # Client contexts (per-thread / named recording slots + stats shards)
+    # ------------------------------------------------------------------ #
+
+    def _ctx_key(self) -> tuple:
+        name = getattr(self._local, "client", None)
+        if name is not None:
+            return ("client", name)
+        return ("thread", threading.get_ident())
+
+    @contextlib.contextmanager
+    def client(self, name: str):
+        """Scope ops to a named client context.
+
+        Inside the scope, recorded ops go to the context's own graph slot
+        and cost charges to its own stats shard — so N logical clients can
+        share one engine (from any threads) without interleaving their
+        programs. Without a ``client()`` scope the calling thread is its
+        own implicit context."""
+        prev = getattr(self._local, "client", None)
+        self._local.client = str(name)
+        try:
+            yield self
+        finally:
+            self._local.client = prev
+
+    @property
+    def _graph(self) -> "_OpGraph | None":
+        """The current client context's recording graph (or None)."""
+        return self._slots.get(self._ctx_key())
+
+    @_graph.setter
+    def _graph(self, g: "_OpGraph | None") -> None:
+        key = self._ctx_key()
+        if g is None:
+            self._slots.pop(key, None)
+        else:
+            self._slots[key] = g
+
+    def _stats_shard(self) -> EngineStats:
+        s = self._stats_shards.get(self._ctx_key())
+        if s is None:
+            s = self._stats_shards[self._ctx_key()] = EngineStats()
+        return s
+
+    @property
+    def stats(self) -> EngineStats:
+        """Merged cost-plane charges across every client context.
+
+        Per-context shards merge in sorted-key order, so the totals are
+        identical no matter which thread/arbitration interleaving produced
+        the charges (float addition is order-sensitive; the merge order is
+        canonical). With a single context this is bit-identical to the
+        pre-concurrency accumulator."""
+        with self._lock:
+            out = EngineStats()
+            for key in sorted(self._stats_shards, key=str):
+                s = self._stats_shards[key]
+                out.latency_ns += s.latency_ns
+                out.energy_j += s.energy_j
+                out.n_sequences += s.n_sequences
+                out.lane_efficiency = min(out.lane_efficiency,
+                                          s.lane_efficiency)
+                out.refresh_stall_ns += s.refresh_stall_ns
+            return out
 
     # ------------------------------------------------------------------ #
     # Cost plumbing
@@ -629,15 +756,26 @@ class PulsarEngine:
 
     def _charge(self, kind: str, n_elems: int, width: int | None = None,
                 n_planes: int | None = None) -> None:
-        w = width or self.width
-        m, n, sr, cost = self._cfg_for(kind, w, n_planes)
-        if self.reliability is not None:
-            # The flush-time vote loop injects at the worst config used.
-            self.reliability.note_op(m, n, sr)
-        batch = (self._batch_for(kind, m, n)
-                 if self.controller is not None else None)
-        self.stats.charge(cost, self._n_vec_rows(n_elems), self.banks, sr,
-                          batch)
+        with self._lock:
+            log = getattr(self._local, "charge_log", None)
+            if log is not None:
+                # Program capture records the charge recipe so replays
+                # price identically to the uncaptured path.
+                log.append((kind, n_elems, width, n_planes))
+            w = width or self.width
+            m, n, sr, cost = self._cfg_for(kind, w, n_planes)
+            if self.reliability is not None:
+                # The flush-time vote loop injects at the worst config used.
+                self.reliability.note_op(m, n, sr)
+            batch = (self._batch_for(kind, m, n)
+                     if self.controller is not None else None)
+            self._stats_shard().charge(cost, self._n_vec_rows(n_elems),
+                                       self.banks, sr, batch)
+
+    def _replay_charges(self, recipe) -> None:
+        """Re-apply a captured charge recipe (one replayed program)."""
+        for kind, n_elems, width, n_planes in recipe:
+            self._charge(kind, n_elems, width, n_planes)
 
     def op_effective_ns(self, kind: str, width: int | None = None,
                         n_planes: int | None = None
@@ -725,35 +863,44 @@ class PulsarEngine:
             if self.tracer is not None:
                 self.counters.inc("engine.autoflush.mode_boundary")
             self.flush()  # one program = one lane count and one mode
-            g = None
-        if g is None:
-            g = self._graph = _OpGraph(
-                n, self.layout.word_bits if raw else self.width,
-                self.layout, raw=raw)
-            if self.tracer is not None:
-                g.t_start = time.perf_counter_ns()
-        if self.tracer is not None:
-            self.counters.inc("engine.ops_recorded")
-            self.counters.inc(f"engine.op.{opcode}")
-        args = []
-        for x in operands:
-            if isinstance(x, LazyArray) and x._value is None \
-                    and x._graph is g:
-                args.append(("op", x._op_idx))
-            else:
-                # Anything else — plain array, already-materialized lazy,
-                # or a pending lazy of ANOTHER graph/engine (materialize()
-                # flushes through its own engine) — enters as a leaf.
-                arr = x.materialize() if isinstance(x, LazyArray) else x
-                args.append(g.leaf_id(arr))
-        out = LazyArray(self, g, len(g.ops), shape)
-        g.add_op(opcode, tuple(args), param, out, internal=internal)
-        if not defer_flush:
-            reason = self._graph_over_threshold(g)
-            if reason:
+        # Cross-context materialization (a pending lazy of ANOTHER graph
+        # entering as a leaf) may dispatch a flush, so resolve operands
+        # before taking the lock for this context's graph mutation.
+        resolved = [x.materialize() if isinstance(x, LazyArray)
+                    and not (x._value is None and x._graph is not None
+                             and x._graph is self._graph)
+                    else x for x in operands]
+        with self._lock:
+            g = self._graph
+            if g is None:
+                g = self._graph = _OpGraph(
+                    n, self.layout.word_bits if raw else self.width,
+                    self.layout, raw=raw)
                 if self.tracer is not None:
+                    g.t_start = time.perf_counter_ns()
+            if self.tracer is not None:
+                self.counters.inc("engine.ops_recorded")
+                self.counters.inc(f"engine.op.{opcode}")
+            args = []
+            for x in resolved:
+                if isinstance(x, LazyArray) and x._value is None \
+                        and x._graph is g:
+                    args.append(("op", x._op_idx))
+                else:
+                    # Plain array or an already-materialized lazy —
+                    # enters as a leaf.
+                    arr = x.materialize() if isinstance(x, LazyArray) else x
+                    args.append(g.leaf_id(arr))
+            out = LazyArray(self, g, len(g.ops), shape)
+            g.add_op(opcode, tuple(args), param, out, internal=internal)
+            reason = None
+            if not defer_flush \
+                    and not getattr(self._local, "no_autoflush", False):
+                reason = self._graph_over_threshold(g)
+                if reason and self.tracer is not None:
                     self.counters.inc(f"engine.autoflush.{reason}")
-                self.flush()  # auto-flush: `out` is live, materializes
+        if reason:
+            self.flush()  # auto-flush: `out` is live, materializes
         return out
 
     def _graph_over_threshold(self, g: _OpGraph) -> str | None:
@@ -779,10 +926,205 @@ class PulsarEngine:
         ``fused_program.optimize_program``) — results and EngineStats are
         unaffected, only redundant dataplane work is dropped. No-op when
         nothing is pending; never touches the cost plane — every op was
-        charged at record time."""
-        g, self._graph = self._graph, None
-        if g is None or not g.ops:
-            return
+        charged at record time.
+
+        Drains, in order: graphs parked by earlier failed flushes (the
+        retry list), then the calling context's own pending graph. A
+        failure parks the graph back on the retry list (never into a
+        recording slot, so the restore cannot interleave with another
+        client's in-flight record) and re-raises."""
+        while True:
+            g = self._take_next(self._ctx_key())
+            if g is None:
+                return
+            self._dispatch_graph(g)
+
+    def flush_all(self) -> None:
+        """Flush every client context's pending graph, drain the retry
+        list, and wait out in-flight async flushes (``Device.flush`` /
+        clean ``with`` exit). Failures propagate like :meth:`flush`."""
+        while True:
+            with self._lock:
+                futs = list(self._inflight.values())
+            for f in futs:
+                f.result()
+            g = self._take_next(None)
+            if g is None:
+                with self._lock:
+                    if not self._inflight:
+                        return
+                continue
+            self._dispatch_graph(g)
+
+    def flush_async(self) -> FlushHandle:
+        """Compile + dispatch the pending graph off the calling thread.
+
+        The record-side half (dead-code scan, program normalization, leaf
+        wire staging) runs on the caller — so at most two flushes are ever
+        staged at once (double buffering: the caller stages flush k+1
+        while the worker dispatches k; a third call blocks). The compile/
+        dispatch/materialize half runs on the engine's single flush worker
+        thread. Returns a :class:`FlushHandle`; ``result()`` re-raises a
+        failed dispatch after parking the graph for retry exactly like a
+        failed synchronous flush."""
+        batch: list[_OpGraph] = []
+        with self._lock:
+            while self._retry:
+                batch.append(self._begin_flush(self._retry.pop(0)))
+            g = self._slots.pop(self._ctx_key(), None)
+            if g is not None and g.ops:
+                batch.append(self._begin_flush(g))
+        if not batch:
+            return FlushHandle(None)
+        staged = []
+        try:
+            for g in batch:
+                staged.append((g, self._prepare_graph(g)))
+        except BaseException:
+            # Nothing reached the worker yet: park the whole batch, in
+            # order, so a later flush/materialize retries it.
+            with self._lock:
+                self._park_graphs(batch)
+            raise
+        self._async_slots.acquire()
+        try:
+            fut = self._ensure_executor().submit(self._async_run, staged)
+        except BaseException:
+            self._async_slots.release()
+            with self._lock:
+                self._park_graphs([g for g, _ in staged])
+            raise
+        with self._lock:
+            for g, _ in staged:
+                self._inflight[id(g)] = fut
+        if self.tracer is not None:
+            self.counters.inc("engine.flush_async")
+        return FlushHandle(fut)
+
+    def close(self) -> None:
+        """Shut the async flush worker down (waits for in-flight
+        dispatches). Safe to call repeatedly; the worker is recreated
+        lazily if ``flush_async`` is used again."""
+        with self._lock:
+            ex, self._executor = self._executor, None
+        if ex is not None:
+            ex.shutdown(wait=True)
+
+    # -- flush plumbing -------------------------------------------------- #
+
+    def _begin_flush(self, g: _OpGraph) -> _OpGraph:
+        """Transition a detached graph to the flushing state (lock held)."""
+        g.state = "flushing"
+        g.done = threading.Event()
+        return g
+
+    def _park_graphs(self, graphs) -> None:
+        """Park failed/abandoned flushes for retry (lock held): FIFO on
+        the retry list, never back into a recording slot — restoring into
+        a slot could interleave with that client's in-flight record."""
+        for g in graphs:
+            g.state = "queued"
+            self._retry.append(g)
+            if g.done is not None:
+                g.done.set()
+
+    def _take_next(self, key) -> "_OpGraph | None":
+        """Pop the next graph to dispatch: retries first, then ``key``'s
+        slot (or any slot when ``key`` is None, for flush_all)."""
+        with self._lock:
+            if self._retry:
+                return self._begin_flush(self._retry.pop(0))
+            if key is None:
+                for k in list(self._slots):
+                    return self._begin_flush(self._slots.pop(k))
+                return None
+            g = self._slots.pop(key, None)
+            return None if g is None else self._begin_flush(g)
+
+    def _ensure_executor(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._executor is None:
+                self._executor = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="pum-flush")
+            return self._executor
+
+    def _async_run(self, staged) -> None:
+        """Worker-side half of flush_async: dispatch each staged graph."""
+        try:
+            for g, st in staged:
+                try:
+                    if st is not None:
+                        self._run_staged(g, st)
+                    with self._lock:
+                        g.state = "done"
+                except BaseException:
+                    with self._lock:
+                        self._park_graphs([g])
+                    raise
+                finally:
+                    if g.done is not None:
+                        g.done.set()
+                    with self._lock:
+                        self._inflight.pop(id(g), None)
+        finally:
+            self._async_slots.release()
+
+    def _dispatch_graph(self, g: _OpGraph) -> None:
+        """Prepare + dispatch one detached graph on the calling thread."""
+        try:
+            st = self._prepare_graph(g)
+            if st is not None:
+                self._run_staged(g, st)
+            with self._lock:
+                g.state = "done"
+        except BaseException:
+            # Keep pending handles recoverable after a transient failure
+            # (interrupt, backend OOM): park the graph so a later
+            # flush/materialize retries instead of orphaning them.
+            with self._lock:
+                self._park_graphs([g])
+            raise
+        finally:
+            if g.done is not None:
+                g.done.set()
+
+    def _materialize_graph(self, g: _OpGraph) -> None:
+        """Make ``g``'s live handles hold values, wherever ``g`` is in the
+        flush lifecycle: still recording (any context's slot), parked for
+        retry, in flight on the async worker (wait on it), or done."""
+        fut = None
+        with self._lock:
+            st = g.state
+            if st == "recording":
+                for k, v in list(self._slots.items()):
+                    if v is g:
+                        del self._slots[k]
+                        break
+                self._begin_flush(g)
+            elif st == "queued":
+                self._retry.remove(g)
+                self._begin_flush(g)
+            elif st == "flushing":
+                fut = self._inflight.get(id(g))
+        if st in ("recording", "queued"):
+            self._dispatch_graph(g)
+        elif st == "flushing":
+            # Another thread is dispatching this graph (sync or async):
+            # wait for it; if it failed and parked the graph, retry here.
+            if fut is not None:
+                fut.result()
+            elif g.done is not None:
+                g.done.wait()
+            if g.state == "queued":
+                self._materialize_graph(g)
+        # st == "done": values are set (or the flush had no live outputs).
+
+    def _prepare_graph(self, g: _OpGraph):
+        """Record-side half of a flush: dead-code scan, program build +
+        normalization, leaf wire staging. Returns None when nothing in the
+        graph is live (nothing to dispatch)."""
+        if not g.ops:
+            return None
         tr = NULL_TRACER if self.tracer is None else self.tracer
         if g.t_start is not None:
             # The record phase ran between first op and now; stamp it as a
@@ -796,7 +1138,7 @@ class PulsarEngine:
         # as in eager mode, but no dataplane work remains).
         out_idx = [i for i, lz in enumerate(live) if lz is not None]
         if not out_idx:
-            return
+            return None
         n_leaves = len(g.leaves)
 
         def vid(tag):  # combined id space: leaves first, then ops
@@ -820,38 +1162,37 @@ class PulsarEngine:
                 if pad:
                     flat = np.pad(flat, (0, pad))
                 leaves.append(g.layout.to_wire(flat))
-        try:
-            with tr.span("flush.compile") as sp_c:
-                if self.tracer is not None:
-                    misses0 = _fused._cached_pipeline.cache_info().misses
-                pipeline = get_pipeline(program, donate=self.donate_leaves,
-                                        backend=self.fused_backend)
-                if self.tracer is not None:
-                    hit = (_fused._cached_pipeline.cache_info().misses
-                           == misses0)
-                    self.counters.inc("engine.pipeline_cache.hit" if hit
-                                      else "engine.pipeline_cache.miss")
-                    sp_c.args["cache"] = "hit" if hit else "miss"
-            rel = self.reliability
-            with tr.span("flush.dispatch", n_ops=len(program.ops),
-                         n_lanes=g.n) as sp_d:
-                if rel is not None and rel.inject:
-                    # Fault-injection hook: the pipeline runs once clean
-                    # (the eager oracle), then the reliability plane votes
-                    # over map-driven faulty replicas, retrying/escalating
-                    # on weak margins (repro.reliability.plane).
-                    voted = with_fault_injection(
-                        pipeline,
-                        lambda o: rel.correct(o, program, g.n, span=sp_d))
-                    outs = voted(*leaves)
-                else:
-                    outs = pipeline(*leaves)
-        except BaseException:
-            # Keep pending handles recoverable after a transient failure
-            # (interrupt, backend OOM): restore the graph so a later
-            # flush/materialize can retry instead of orphaning them.
-            self._graph = g
-            raise
+        return (program, out_pos, live, out_idx, leaves)
+
+    def _run_staged(self, g: _OpGraph, staged) -> None:
+        """Dispatch-side half of a flush: compile, run, materialize."""
+        program, out_pos, live, out_idx, leaves = staged
+        tr = NULL_TRACER if self.tracer is None else self.tracer
+        with tr.span("flush.compile") as sp_c:
+            if self.tracer is not None:
+                misses0 = _fused._cached_pipeline.cache_info().misses
+            pipeline = get_pipeline(program, donate=self.donate_leaves,
+                                    backend=self.fused_backend)
+            if self.tracer is not None:
+                hit = (_fused._cached_pipeline.cache_info().misses
+                       == misses0)
+                self.counters.inc("engine.pipeline_cache.hit" if hit
+                                  else "engine.pipeline_cache.miss")
+                sp_c.args["cache"] = "hit" if hit else "miss"
+        rel = self.reliability
+        with tr.span("flush.dispatch", n_ops=len(program.ops),
+                     n_lanes=g.n) as sp_d:
+            if rel is not None and rel.inject:
+                # Fault-injection hook: the pipeline runs once clean
+                # (the eager oracle), then the reliability plane votes
+                # over map-driven faulty replicas, retrying/escalating
+                # on weak margins (repro.reliability.plane).
+                voted = with_fault_injection(
+                    pipeline,
+                    lambda o: rel.correct(o, program, g.n, span=sp_d))
+                outs = voted(*leaves)
+            else:
+                outs = pipeline(*leaves)
         with tr.span("flush.materialize", n_outputs=len(out_idx)):
             for i, pos in zip(out_idx, out_pos):
                 lz = live[i]
@@ -1098,7 +1439,8 @@ class PulsarEngine:
         return self.stats.latency_ns * 1e-6
 
     def reset_stats(self) -> None:
-        self.stats = EngineStats()
+        with self._lock:
+            self._stats_shards.clear()
 
 
 _M1 = np.uint64(0x5555555555555555)

@@ -26,6 +26,13 @@ deprecated compat shim). Three pieces:
   variation-aware replication planning, weak-column steering and —
   opt-in — fault injection with replication-vote correction and retry
   escalation. See ``docs/reliability.md``.
+* concurrency (``Device.flush_async`` -> :class:`FlushHandle`,
+  ``Device.capture`` -> :class:`CapturedProgram`, ``Device.client``) —
+  N client contexts record into one device without interleaving, flushes
+  compile/dispatch off the caller's thread, and steady-state programs
+  replay a captured pipeline with zero re-recording. See the
+  "Concurrent clients & async flush" section of
+  ``docs/execution-pipeline.md``.
 
 See ``docs/api.md`` for the full surface, the Device lifecycle, the
 backend registry contract, and the old-call -> new-call migration table.
@@ -34,21 +41,24 @@ backend registry contract, and the old-call -> new-call migration table.
 from repro.backends import (BackendSpec, available_backends, get_backend,
                             register_backend, select_backend,
                             unregister_backend)
-from repro.core.engine import EngineStats
+from repro.core.engine import EngineStats, FlushHandle
 from repro.kernels.plane_layout import (LAYOUT32, LAYOUT64, PlaneLayout,
                                         get_layout)
 from repro.pum.api import (Device, PumArray, as_device, asarray,
                            default_device, device, profile)
+from repro.pum.capture import CapturedProgram
 from repro.pum.config import EngineConfig
 from repro.reliability import ReliabilityConfig, ReliabilityMap, calibrate
 from repro.telemetry import CounterBank, Tracer
 
 __all__ = [
     "BackendSpec",
+    "CapturedProgram",
     "CounterBank",
     "Device",
     "EngineConfig",
     "EngineStats",
+    "FlushHandle",
     "LAYOUT32",
     "LAYOUT64",
     "PlaneLayout",

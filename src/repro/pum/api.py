@@ -101,9 +101,39 @@ class Device:
         return PumArray(self, np.asarray(x, np.uint64))
 
     def flush(self) -> None:
-        """Materialize the pending fused op graph (no-op when eager or
-        empty; never touches the cost plane)."""
-        self.engine.flush()
+        """Materialize every pending fused op graph — all client
+        contexts, parked retries, and in-flight async flushes (no-op when
+        eager or empty; never touches the cost plane)."""
+        self.engine.flush_all()
+
+    def flush_async(self):
+        """Compile + dispatch the calling context's pending graph off
+        this thread (double-buffered: the caller stages the next flush
+        while the worker dispatches the current one). Returns a
+        :class:`~repro.core.engine.FlushHandle`; ``result()`` waits and
+        re-raises a failed dispatch after parking the graph for retry,
+        exactly like a failed synchronous flush."""
+        return self.engine.flush_async()
+
+    def capture(self, fn, name: str | None = None):
+        """Capture ``fn(*PumArrays) -> PumArray(s)`` as a
+        :class:`~repro.pum.capture.CapturedProgram`: first call per input
+        shape records + compiles; later calls replay the compiled pipeline
+        with zero re-recording (cost charges replay identically)."""
+        from repro.pum.capture import CapturedProgram
+        return CapturedProgram(self, fn, name=name)
+
+    def client(self, name: str):
+        """Scope ops to a named client context (``with dev.client("a"):``)
+        — its own recording graph and stats shard, so N logical clients
+        share the device without interleaving their programs."""
+        return self.engine.client(name)
+
+    def close(self) -> None:
+        """Shut the async flush worker down (waits for in-flight
+        dispatches); safe to call repeatedly, recreated lazily on the
+        next ``flush_async``."""
+        self.engine.close()
 
     def __enter__(self) -> "Device":
         _ACTIVE.append(self)
@@ -113,6 +143,7 @@ class Device:
         _ACTIVE.remove(self)
         if exc_type is None:
             self.flush()
+        self.close()
 
     # -- cost plane ----------------------------------------------------- #
 

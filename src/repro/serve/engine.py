@@ -9,11 +9,22 @@ the same ones the dry-run lowers for the 256/512-chip meshes.)
 Bulk slot bookkeeping routes through the PuM dataplane by default
 (``pum_bulk=True``): the per-tick stop predicate — EOS match, generated
 length cap, context-length cap, across all active slots — is one fused
-PuM program (xor/reduce_or equality + less-than compares) recorded
+PuM program (xor/reduce_or equality + less-than compares) expressed
 through ``repro.pum`` operators instead of a per-slot Python conditional.
-Results are bit-identical to the host path (tested); the device's cost
-plane (``ServeEngine.pum.stats``) prices what that bookkeeping would cost
-executed in DRAM. ``pum_bulk=False`` restores the pure-host loop.
+The predicate is captured once via ``Device.capture`` at engine
+construction, so every steady-state tick *replays* a compiled pipeline —
+zero graph re-recording per tick. Results are bit-identical to the host
+path (tested); the device's cost plane (``ServeEngine.pum.stats``)
+prices what that bookkeeping would cost executed in DRAM
+(the captured charge recipe replays per tick, so totals advance exactly
+as if re-recorded). ``pum_bulk=False`` restores the pure-host loop.
+
+``async_stop=True`` (requires ``pum_bulk``) dispatches each tick's stop
+predicate on the device's flush worker at tick end and resolves it at
+the *start* of the next tick — before admission and decode — taking the
+predicate latency off the tick's critical path. Token streams are
+bit-identical to the synchronous mode: slots free at the same tick
+boundary either way, just on the other side of it.
 
 ``telemetry=True`` records per-tick observability through the shared
 ``repro.telemetry`` pieces: decode-slot occupancy and stop-predicate
@@ -55,7 +66,10 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None, max_batch: int = 4,
                  max_len: int = 256, eos_id: int = 1, seed: int = 0,
                  greedy: bool = True, pum_bulk: bool = True,
-                 telemetry: bool = False):
+                 telemetry: bool = False, async_stop: bool = False):
+        if async_stop and not pum_bulk:
+            raise ValueError("async_stop requires pum_bulk=True (the stop "
+                             "predicate runs on the PuM flush worker)")
         self.cfg = cfg
         # Fused PuM device for bulk slot bookkeeping (stop masks): ops
         # record lazily and each tick's predicate compiles to one program.
@@ -91,9 +105,17 @@ class ServeEngine:
             lambda p, b: prefill(cfg, p, b, max_len))
         self.queue: list[Request] = []
         self.finished: list[Request] = []
+        self.async_stop = async_stop
+        # In-flight stop predicate from the previous tick (async_stop):
+        # (CaptureHandle, active slots it was computed over).
+        self._stop_pending: tuple | None = None
         if self.pum is not None:
-            # Warm-up: compile the fixed-shape stop predicate now so the
-            # one-time jit cost never lands on a request's first token.
+            # Capture the fixed-shape stop predicate once: the warm-up
+            # call records + compiles it, so neither the jit cost nor any
+            # graph re-recording ever lands on a request's token path —
+            # steady-state ticks replay the pipeline.
+            self._stop_prog = self.pum.capture(self._stop_expr,
+                                               name="serve.stop")
             self._stop_mask_pum([])
             self.pum.reset_stats()
 
@@ -136,19 +158,31 @@ class ServeEngine:
             self.pos[slot] = t
             self.cur_token[slot] = tok
 
-    def _stop_mask_pum(self, active: list[int]) -> list[bool]:
-        """Bulk stop predicate on the fused PuM engine: per active slot,
-        ``tok == eos or n_generated >= max_new or pos >= max_len-1``. The
-        recorded ops (``^`` + ``reduce_or`` equality, ``<`` length caps)
-        compile into one fused program on materialization — semantics
-        identical to the host conditional in :meth:`tick`. Operands are
-        padded to the full ``max_batch`` decode batch (inactive slots get
-        never-stopping dummies and are filtered out), so every tick reuses
-        ONE compiled pipeline — it is warmed up in ``__init__`` to keep
-        the jit compile off the first-token latency path."""
-        dev = self.pum
+    def _stop_expr(self, n_out, cap, pos, tok):
+        """The stop predicate as a function of PumArrays — captured once
+        by ``Device.capture`` in ``__init__``. Per slot:
+        ``tok == eos or n_generated >= max_new or pos >= max_len-1``
+        (``^`` + ``reduce_or`` equality, ``<`` length caps) — semantics
+        identical to the host conditional in :meth:`tick`. The ``ones``/
+        ``limit``/``eos`` operands close over engine config, so capture
+        snapshots them as constant leaves with staged wire buffers."""
         m = self.max_batch
         ones = np.ones(m, np.uint64)
+        limit = np.full(m, self.max_len - 1, np.uint64)
+        stop = ((n_out < cap) ^ ones) \
+            | ((pos < limit) ^ ones)                # len cap | ctx cap
+        if 0 <= self.eos_id < (1 << self.pum.width):
+            eos = np.full(m, self.eos_id, np.uint64)
+            neq = (tok ^ eos).reduce_bits("or")
+            stop = stop | (neq ^ ones)              # EOS
+        return stop
+
+    def _stop_operands(self, active: list[int]) -> tuple[np.ndarray, ...]:
+        """Snapshot the per-slot predicate operands, padded to the full
+        ``max_batch`` decode batch (inactive slots get never-stopping
+        dummies and are filtered out on resolve), so every tick hits the
+        ONE captured shape specialization."""
+        m = self.max_batch
         n_out = np.zeros(m, np.uint64)
         cap = np.ones(m, np.uint64)
         pos = np.zeros(m, np.uint64)
@@ -159,14 +193,12 @@ class ServeEngine:
             cap[s] = req.max_new_tokens
             pos[s] = self.pos[s]
             tok[s] = self.cur_token[s]
-        limit = np.full(m, self.max_len - 1, np.uint64)
-        stop = ((dev.asarray(n_out) < cap) ^ ones) \
-            | ((dev.asarray(pos) < limit) ^ ones)   # len cap | ctx cap
-        if 0 <= self.eos_id < (1 << dev.width):
-            eos = np.full(m, self.eos_id, np.uint64)
-            neq = (dev.asarray(tok) ^ eos).reduce_bits("or")
-            stop = stop | (neq ^ ones)              # EOS
-        full = stop.to_numpy().astype(bool)
+        return n_out, cap, pos, tok
+
+    def _stop_mask_pum(self, active: list[int]) -> list[bool]:
+        """Synchronous bulk stop predicate: replay the captured pipeline
+        and filter to the active slots."""
+        full = self._stop_prog(*self._stop_operands(active)).astype(bool)
         return [bool(full[s]) for s in active]
 
     def tick(self) -> int:
@@ -175,7 +207,29 @@ class ServeEngine:
         with self._tr.span("serve.tick") as sp_tick:
             return self._tick_inner(sp_tick)
 
+    def _resolve_stop(self) -> None:
+        """Join the previous tick's in-flight stop predicate (async_stop)
+        and free the slots it stopped. Runs before admission/decode, so
+        a slot stopped at tick N never decodes at tick N+1 — token
+        streams match the synchronous mode bit for bit."""
+        if self._stop_pending is None:
+            return
+        handle, active = self._stop_pending
+        self._stop_pending = None
+        full = handle.result().astype(bool)
+        self._finish([bool(full[s]) for s in active], active)
+
+    def _finish(self, done, active: list[int]) -> None:
+        for stop, slot in zip(done, active):
+            if stop:
+                req = self.slot_req[slot]
+                req.done = True
+                req.t_done = time.perf_counter()
+                self.finished.append(req)
+                self.slot_req[slot] = None
+
     def _tick_inner(self, sp_tick) -> int:
+        self._resolve_stop()
         self._admit()
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if self.telemetry:
@@ -194,34 +248,42 @@ class ServeEngine:
             req.out_tokens.append(tok)
             self.pos[slot] += 1
             self.cur_token[slot] = tok
+        done = None
         with self._tr.span("serve.stop_predicate",
                            path="pum" if self.pum is not None
                            else "host") as sp:
-            if self.pum is not None:
-                done = self._stop_mask_pum(active)
-            else:
+            if self.pum is None:
                 done = np.array(
                     [self.cur_token[s] == self.eos_id
                      or len(self.slot_req[s].out_tokens)
                      >= self.slot_req[s].max_new_tokens
                      or self.pos[s] >= self.max_len - 1 for s in active])
+            elif self.async_stop:
+                # Dispatch on the flush worker; resolves at the start of
+                # the next tick. The span measures only the (cheap)
+                # snapshot + submit — the replay runs off-thread.
+                self._stop_pending = (
+                    self._stop_prog.call_async(*self._stop_operands(active)),
+                    active)
+            else:
+                done = self._stop_mask_pum(active)
         if self.telemetry:
-            # Latency histogram of the stop-predicate flush (the fused
-            # program's record->materialize round trip per tick).
+            # Latency histogram of the stop-predicate step on the caller
+            # thread (captured-pipeline replay, or submit-only under
+            # async_stop — the off-thread saving is the point).
             self.counters.observe("serve.stop_flush_ns", sp.dur_ns)
-        for stop, slot in zip(done, active):
-            if stop:
-                req = self.slot_req[slot]
-                req.done = True
-                req.t_done = time.perf_counter()
-                self.finished.append(req)
-                self.slot_req[slot] = None
+        if done is not None:
+            self._finish(done, active)
         return len(active)
 
     def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
         ticks = 0
+        # Under async_stop, occupied slots may only be freed by the next
+        # tick's resolve — the loop condition sees them as active and
+        # naturally runs that one extra (no-decode) tick.
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and ticks < max_ticks:
             self.tick()
             ticks += 1
+        self._resolve_stop()
         return self.finished

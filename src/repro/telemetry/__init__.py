@@ -10,6 +10,11 @@ Three pieces, one contract:
   row-buffer, stall, and refresh counters. Derivation only *reads* the
   audit trail the controller already emits, so scheduling stays
   byte-identical whether or not anyone is watching.
+  :func:`derive_port_counters` extends the same replay to a
+  ``CrossbarTrace``'s per-client-port attribution (grant counts,
+  starvation gaps), and :func:`check_timing_invariants` audits any
+  trace against the rank-wide tRRD/tFAW/tCCD/bus/refresh contract,
+  returning a list of violations (empty = clean).
 * :class:`Tracer` / :data:`NULL_TRACER` — span context-managers around
   the fused pipeline's flush phases, exportable as Chrome trace-event
   JSON (opens in Perfetto).
@@ -18,7 +23,9 @@ See ``docs/observability.md`` for counter definitions, units, and the
 span taxonomy.
 """
 
-from repro.telemetry.counters import CounterBank, derive_controller_counters
+from repro.telemetry.counters import (CounterBank, check_timing_invariants,
+                                      derive_controller_counters,
+                                      derive_port_counters)
 from repro.telemetry.tracer import NULL_TRACER, Span, Tracer
 
 __all__ = [
@@ -26,5 +33,7 @@ __all__ = [
     "NULL_TRACER",
     "Span",
     "Tracer",
+    "check_timing_invariants",
     "derive_controller_counters",
+    "derive_port_counters",
 ]

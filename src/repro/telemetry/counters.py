@@ -253,3 +253,145 @@ def derive_controller_counters(result, timings=None) -> CounterBank:
         bank.inc("refresh.stall_ns",
                  getattr(result, "refresh_stall_ns", 0.0))
     return bank
+
+
+def derive_port_counters(trace) -> CounterBank:
+    """Derive per-client-port arbitration counters from a crossbar trace.
+
+    ``trace`` is a ``CrossbarTrace`` (or anything carrying ``events``,
+    ``port_of``, ``seqs``, ``n_ports``). Like
+    :func:`derive_controller_counters`, this is a pure replay of the
+    audit trail — the crossbar's grant decisions are attributed after
+    the fact, never instrumented in the arbitration loop.
+
+    Counters produced:
+
+    * ``xbar.n_ports`` — port count of the trace.
+    * ``port<P>.cmds`` — non-NOP commands attributed to port P.
+    * ``port<P>.seqs`` — sequences (atomic grant units) port P won.
+    * ``port<P>.grant_gap_max_ns`` — the longest interval between two
+      consecutive sequence *starts* granted to port P while P still had
+      later work (the starvation bound: round-robin arbitration keeps
+      this finite for any port with queued requests).
+    """
+    from repro.core.commands import Op
+
+    bank = CounterBank()
+    n_ports = int(getattr(trace, "n_ports", 1))
+    bank.inc("xbar.n_ports", n_ports)
+    events = list(trace.events)
+    port_of = list(getattr(trace, "port_of", ()))
+    seqs = list(getattr(trace, "seqs", ()))
+    cmds = [0] * n_ports
+    seq_seen: set = set()
+    seq_count = [0] * n_ports
+    # Sequence-start grant times per port, in issue order.
+    grant_times: list[list[float]] = [[] for _ in range(n_ports)]
+    for (cmd, when), p, sq in zip(events, port_of, seqs):
+        if cmd.op is not Op.NOP:
+            cmds[p] += 1
+        if sq not in seq_seen:
+            seq_seen.add(sq)
+            seq_count[p] += 1
+            grant_times[p].append(when)
+    for p in range(n_ports):
+        bank.inc(f"port{p}.cmds", cmds[p])
+        bank.inc(f"port{p}.seqs", seq_count[p])
+        gaps = [b - a for a, b in zip(grant_times[p], grant_times[p][1:])]
+        bank.inc(f"port{p}.grant_gap_max_ns", max(gaps, default=0.0))
+    return bank
+
+
+def check_timing_invariants(result, timings=None,
+                            eps: float = 1e-6) -> list[str]:
+    """Audit a scheduled command trace against the rank-wide DRAM timing
+    contract. Returns a list of human-readable violation strings — empty
+    means the schedule is clean.
+
+    Pure post-hoc replay (same audit trail as
+    :func:`derive_controller_counters`); checks exactly the constraints
+    ``CommandMultiplexer._rank_constraints`` enforces, independently
+    re-derived so a scheduler bug cannot hide in shared code:
+
+    * **tRRD_S** — consecutive ACTs (any banks) at least ``trrd_s``
+      apart;
+    * **tFAW** — any four consecutive ACTs span at least ``tfaw``
+      (rolling window);
+    * **tCCD_S** — consecutive column (RD/WR) commands at least
+      ``tccd_s`` apart;
+    * **bus tCK** — consecutive non-NOP commands at least one ``tck``
+      apart (one command bus);
+    * **refresh lockout** — no command issues strictly inside a refresh
+      window, and no sequence straddles one (in-flight sequences drain
+      before the rank is granted to the refresher) — checked when the
+      trace carries ``refresh_windows`` (and ``seqs`` for atomicity).
+
+    ``eps`` absorbs float rounding in the ns-domain event times.
+    """
+    from repro.core.commands import Op
+
+    if timings is None:
+        timings = getattr(result, "timings", None)
+    if timings is None:
+        from repro.core.timing import DDR4_2400
+        timings = DDR4_2400
+    t = timings
+
+    events = list(result.events)
+    violations: list[str] = []
+    acts: deque[float] = deque(maxlen=4)
+    last_act = last_col = last_bus = None
+    for i, (cmd, when) in enumerate(events):
+        if cmd.op is Op.ACT:
+            if last_act is not None and when - last_act < t.trrd_s - eps:
+                violations.append(
+                    f"tRRD: ACT@{when:.3f} (bank {cmd.bank}) only "
+                    f"{when - last_act:.3f} ns after previous ACT "
+                    f"(< {t.trrd_s})")
+            if len(acts) == 4 and when - acts[0] < t.tfaw - eps:
+                violations.append(
+                    f"tFAW: ACT@{when:.3f} (bank {cmd.bank}) is the 5th "
+                    f"ACT within {when - acts[0]:.3f} ns (< {t.tfaw})")
+            acts.append(when)
+            last_act = when
+        elif cmd.op in (Op.RD, Op.WR):
+            if last_col is not None and when - last_col < t.tccd_s - eps:
+                violations.append(
+                    f"tCCD: {cmd.op.name}@{when:.3f} (bank {cmd.bank}) "
+                    f"only {when - last_col:.3f} ns after previous "
+                    f"column command (< {t.tccd_s})")
+            last_col = when
+        if cmd.op is not Op.NOP:
+            if last_bus is not None and when - last_bus < t.tck - eps:
+                violations.append(
+                    f"bus: {cmd.op.name}@{when:.3f} (bank {cmd.bank}) "
+                    f"only {when - last_bus:.3f} ns after previous "
+                    f"command (< tCK {t.tck})")
+            last_bus = when
+
+    windows = list(getattr(result, "refresh_windows", ()) or ())
+    if windows:
+        for cmd, when in events:
+            if cmd.op is Op.NOP:
+                continue
+            for start, end in windows:
+                if start + eps < when < end - eps:
+                    violations.append(
+                        f"refresh: {cmd.op.name}@{when:.3f} (bank "
+                        f"{cmd.bank}) issued inside refresh lockout "
+                        f"[{start:.3f}, {end:.3f}]")
+        seqs = list(getattr(result, "seqs", ()) or ())
+        if len(seqs) == len(events):
+            span: dict = {}
+            for sq, (_, when) in zip(seqs, events):
+                s = span.setdefault(sq, [when, when])
+                s[0] = min(s[0], when)
+                s[1] = max(s[1], when)
+            for sq, (s0, s1) in span.items():
+                for start, end in windows:
+                    if s0 < start - eps and s1 > start + eps:
+                        violations.append(
+                            f"refresh: sequence {sq} straddles the "
+                            f"lockout starting at {start:.3f} "
+                            f"(spans [{s0:.3f}, {s1:.3f}])")
+    return violations

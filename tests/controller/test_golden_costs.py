@@ -1,0 +1,124 @@
+"""Golden-trace regression: cost numbers pinned bit-identical.
+
+The committed fixture (``golden_costs.json``) pins
+
+* the legacy ``MemoryController.schedule`` trace for the canonical
+  bank-parallel MAJ workload (event digest + totals), and that the
+  crossbar in single-client mode reproduces it **byte-for-byte** — the
+  same crossbar-off == legacy discipline PRs 1-7 used;
+* fig17/fig20-style real-world cost-plane numbers (BMI active-users and
+  BitWeaving scan) to the exact float.
+
+Any arbitration or cost-model change that shifts these diffs loudly.
+Intentional changes regenerate the fixture:
+
+    PYTHONPATH=src python tests/controller/test_golden_costs.py --regen
+"""
+
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+
+from repro.controller import MemoryController, retarget_program
+from repro.core.cost_model import CostModel
+
+FIXTURE = pathlib.Path(__file__).with_name("golden_costs.json")
+
+
+def canonical_programs():
+    unit = CostModel(row_bits=65536).maj_unit_programs(3, 8)
+    progs = []
+    for b in range(8):
+        progs.extend(retarget_program(p, b) for p in unit)
+    return progs
+
+
+def trace_digest(tr) -> str:
+    lines = [f"{c.op.name},{c.bank},{c.row},{c.min_gap!r},{t!r}"
+             for c, t in zip(tr.cmds, tr.issue_times)]
+    return hashlib.sha256("\n".join(lines).encode()).hexdigest()
+
+
+def realworld_runs():
+    """The fixture's fig20 workloads, on fixed seeds/config."""
+    import repro.pum as pum
+    from repro.core import realworld
+
+    rng = np.random.default_rng(0)
+    bitmaps = (rng.integers(0, 1 << 63, (7, 64), dtype=np.uint64)
+               | rng.integers(0, 1 << 63, (7, 64), dtype=np.uint64))
+    dev = pum.device(width=64, fuse=True)
+    got_bmi, _, _ = realworld.bmi_active_users(dev, bitmaps)
+    bmi = {"result": got_bmi, "latency_ns": dev.stats.latency_ns,
+           "energy_j": dev.stats.energy_j,
+           "n_sequences": dev.stats.n_sequences}
+    col = rng.integers(0, 1 << 20, 4096, dtype=np.uint64)
+    dev2 = pum.device(width=32, fuse=True)
+    got_bw, _, _ = realworld.bitweaving_scan(dev2, col, 1000, 800000)
+    bw = {"result": got_bw, "latency_ns": dev2.stats.latency_ns,
+          "energy_j": dev2.stats.energy_j,
+          "n_sequences": dev2.stats.n_sequences}
+    return bmi, bw
+
+
+def test_schedule_trace_matches_golden():
+    fix = json.loads(FIXTURE.read_text())["schedule"]
+    tr = MemoryController().schedule(canonical_programs())
+    assert len(tr.cmds) == fix["n_events"]
+    assert tr.total_ns == fix["total_ns"]          # bit-identical floats
+    assert tr.energy_j == fix["energy_j"]
+    assert tr.n_refreshes == fix["n_refreshes"]
+    assert trace_digest(tr) == fix["events_sha256"]
+
+
+def test_crossbar_single_client_matches_golden():
+    """Crossbar off == legacy path: one port through the crossbar must
+    reproduce the committed legacy trace byte-for-byte, at any
+    lookahead."""
+    fix = json.loads(FIXTURE.read_text())["schedule"]
+    mc = MemoryController()
+    for lookahead in (1, 8):
+        tr = mc.schedule_concurrent([canonical_programs()],
+                                    lookahead=lookahead)
+        assert trace_digest(tr) == fix["events_sha256"]
+        assert tr.total_ns == fix["total_ns"]
+        assert tr.energy_j == fix["energy_j"]
+
+
+def test_realworld_cost_numbers_match_golden():
+    fix = json.loads(FIXTURE.read_text())
+    bmi, bw = realworld_runs()
+    assert bmi == fix["fig20_bmi_active_users"]
+    assert bw == fix["fig20_bitweaving_scan"]
+
+
+def _regen():                                       # pragma: no cover
+    tr = MemoryController().schedule(canonical_programs())
+    bmi, bw = realworld_runs()
+    fix = {
+        "_comment": "Golden cost/trace fixture: legacy schedule digest "
+                    "(the crossbar in single-client mode must reproduce "
+                    "it byte-for-byte) and fig17/fig20-style realworld "
+                    "cost-plane numbers. Regenerate with "
+                    "tests/controller/test_golden_costs.py --regen only "
+                    "for an intentional cost-model change.",
+        "schedule": {"workload": "maj_unit_programs(3, 8) x 8 banks",
+                     "n_events": len(tr.cmds),
+                     "total_ns": tr.total_ns, "energy_j": tr.energy_j,
+                     "n_refreshes": tr.n_refreshes,
+                     "events_sha256": trace_digest(tr)},
+        "fig20_bmi_active_users": bmi,
+        "fig20_bitweaving_scan": bw,
+    }
+    FIXTURE.write_text(json.dumps(fix, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {FIXTURE}")
+
+
+if __name__ == "__main__":                          # pragma: no cover
+    import sys
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

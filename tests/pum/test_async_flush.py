@@ -1,0 +1,423 @@
+"""Concurrent-client dataplane: async flush, client contexts, capture.
+
+The correctness contract:
+
+* N client streams recording into one device produce results bit-exact
+  to the same programs flushed serially, and ``EngineStats`` totals are
+  identical under any arbitration/flush order (per-client stats shards
+  merge in a deterministic order);
+* ``Device.flush_async`` returns a future-like handle; a failed flush
+  parks the graph for retry exactly like the synchronous path, and the
+  restoration never interleaves with another client's in-flight
+  recording;
+* ``Device.capture`` replays a compiled program with zero re-recording
+  and a bit-identical cost plane.
+
+The thread stress tests carry the ``concurrent`` marker and run in CI
+under a wall-clock timeout; the ``thread_guard`` fixture fails any test
+that leaks live worker threads.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.pum as pum
+from repro.kernels import fused_program
+
+pytestmark = pytest.mark.fused
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _pipeline_cache_hygiene():
+    # The random programs here compile hundreds of unique structures;
+    # clear the shared pipeline LRU afterwards so later suites don't
+    # run against a saturated cache.
+    yield
+    fused_program._cached_pipeline.cache_clear()
+
+_BINOPS = [
+    ("add", lambda x, y: x + y),
+    ("and", lambda x, y: x & y),
+    ("or", lambda x, y: x | y),
+    ("xor", lambda x, y: x ^ y),
+    ("mul", lambda x, y: x * y),
+    ("sub", lambda x, y: x - y),
+]
+
+
+def _mask(width):
+    return np.uint64(2**width - 1) if width < 64 else np.uint64(2**64 - 1)
+
+
+def random_program(rng, width, n=64, depth=4):
+    """A random op chain and its numpy reference, masked to the width."""
+    mask = _mask(width)
+    arrays = [rng.integers(0, int(mask) + 1, n, dtype=np.uint64) & mask
+              for _ in range(3)]
+    picks = [int(rng.integers(len(_BINOPS))) for _ in range(depth)]
+    operand = [int(rng.integers(len(arrays))) for _ in range(depth)]
+
+    def run(asarray):
+        acc = asarray(arrays[0])
+        for p, i in zip(picks, operand):
+            acc = _BINOPS[p][1](acc, asarray(arrays[i]))
+        return acc
+
+    want = run(lambda a: a)
+    want = np.asarray(want, dtype=np.uint64) & mask
+    return run, want
+
+
+@pytest.fixture
+def thread_guard():
+    """Fail the test if it leaks live threads (and act as a cheap
+    timeout backstop: a deadlocked worker shows up as a leak)."""
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 15.0
+    while time.monotonic() < deadline:
+        leaked = [t for t in threading.enumerate()
+                  if t not in before and t.is_alive()]
+        if not leaked:
+            return
+        time.sleep(0.05)
+    pytest.fail(f"leaked threads: {[t.name for t in leaked]}")
+
+
+# --------------------------------------------------------------------- #
+# flush_async: handle semantics
+# --------------------------------------------------------------------- #
+
+def test_flush_async_result_matches_sync(thread_guard):
+    with pum.device(width=32, fuse=True) as dev:
+        a = np.arange(256, dtype=np.uint64)
+        t = dev.asarray(a) + a
+        h = dev.flush_async()
+        assert isinstance(h, pum.FlushHandle)
+        assert h.exception() is None
+        np.testing.assert_array_equal(
+            t.to_numpy(), (2 * a) & np.uint64(0xFFFFFFFF))
+        assert h.done()
+
+
+def test_flush_async_empty_graph_is_done_noop(thread_guard):
+    with pum.device(width=32, fuse=True) as dev:
+        h = dev.flush_async()
+        assert h.done() and h.result() is None
+
+
+def test_flush_async_double_buffered_back_to_back(thread_guard):
+    """Two async flushes in flight at once (the staging double buffer);
+    both materialize correctly."""
+    with pum.device(width=32, fuse=True) as dev:
+        a = np.arange(128, dtype=np.uint64)
+        outs, handles = [], []
+        for k in range(4):
+            outs.append(dev.asarray(a) + np.uint64(k))
+            handles.append(dev.flush_async())
+        for h in handles:
+            h.result(timeout=30)
+        for k, t in enumerate(outs):
+            np.testing.assert_array_equal(t.to_numpy(), a + np.uint64(k))
+
+
+def test_materialize_waits_for_inflight_async(thread_guard):
+    with pum.device(width=32, fuse=True) as dev:
+        a = np.arange(64, dtype=np.uint64)
+        t = dev.asarray(a) ^ a
+        dev.flush_async()
+        np.testing.assert_array_equal(t.to_numpy(), np.zeros_like(a))
+
+
+def test_flush_async_latency_off_caller_thread(thread_guard):
+    """The handle resolves on the worker: the caller observes completion
+    without invoking any flush machinery itself."""
+    with pum.device(width=32, fuse=True) as dev:
+        a = np.arange(4096, dtype=np.uint64)
+        t = dev.asarray(a) * a
+        h = dev.flush_async()
+        deadline = time.monotonic() + 30.0
+        while not h.done() and time.monotonic() < deadline:
+            time.sleep(0.001)
+        assert h.done()
+        # already materialized by the worker — no graph left to flush
+        np.testing.assert_array_equal(
+            t.to_numpy(), (a * a) & np.uint64(0xFFFFFFFF))
+
+
+# --------------------------------------------------------------------- #
+# failure parks the graph; retry recovers — sync, async, and under
+# concurrent recording (the exception-safety small fix)
+# --------------------------------------------------------------------- #
+
+def _boom(*a, **kw):
+    raise RuntimeError("transient backend failure")
+
+
+def test_failed_async_flush_parks_graph_for_retry(monkeypatch,
+                                                  thread_guard):
+    from repro.core import engine as engine_mod
+    dev = pum.device(width=32, fuse=True)
+    a = np.arange(64, dtype=np.uint64)
+    t = dev.asarray(a) + a
+    real = engine_mod.get_pipeline
+    monkeypatch.setattr(engine_mod, "get_pipeline", _boom)
+    h = dev.flush_async()
+    with pytest.raises(RuntimeError, match="transient"):
+        h.result(timeout=30)
+    assert isinstance(h.exception(timeout=30), RuntimeError)
+    monkeypatch.setattr(engine_mod, "get_pipeline", real)
+    np.testing.assert_array_equal(t.to_numpy(), 2 * a)   # retried
+    dev.close()
+
+
+def test_failed_flush_restore_is_isolated_from_other_clients(
+        monkeypatch, thread_guard):
+    """The small-fix regression: while client A's flush fails and parks
+    its graph, client B records and flushes concurrently; B's stream is
+    unaffected and A's graph retries cleanly afterwards."""
+    from repro.core import engine as engine_mod
+    dev = pum.device(width=32, fuse=True)
+    a = np.arange(64, dtype=np.uint64)
+
+    with dev.client("A"):
+        ta = dev.asarray(a) + a
+    real = engine_mod.get_pipeline
+    monkeypatch.setattr(engine_mod, "get_pipeline", _boom)
+    with dev.client("A"):
+        with pytest.raises(RuntimeError, match="transient"):
+            dev.flush()
+
+    errors = []
+
+    def b_stream():
+        try:
+            with dev.client("B"):
+                for k in range(20):
+                    t = dev.asarray(a) ^ np.uint64(k)
+                    dev.flush()
+                    np.testing.assert_array_equal(
+                        t.to_numpy(), a ^ np.uint64(k))
+        except Exception as exc:                # pragma: no cover
+            errors.append(exc)
+
+    monkeypatch.setattr(engine_mod, "get_pipeline", real)
+    th = threading.Thread(target=b_stream)
+    th.start()
+    # A's parked graph retries while B records on another thread
+    np.testing.assert_array_equal(ta.to_numpy(), 2 * a)
+    th.join(timeout=30)
+    assert not th.is_alive() and not errors
+    dev.close()
+
+
+# --------------------------------------------------------------------- #
+# N client streams: bit-exact + stats-identical vs serial
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("seed", range(4))
+def test_interleaved_clients_bit_exact_and_stats_equal_serial(seed):
+    """Property test: the same client streams produce bit-identical
+    results and bit-identical EngineStats whether recorded serially or
+    interleaved in a seeded arbitrary order."""
+    rng = np.random.default_rng(seed)
+    n_clients = int(rng.integers(2, 6))
+    streams = [[random_program(rng, 32) for _ in range(3)]
+               for _ in range(n_clients)]
+
+    # serial: one client at a time, flushed in submission order
+    serial = pum.device(width=32, fuse=True)
+    serial_out = []
+    for ci, progs in enumerate(streams):
+        with serial.client(f"c{ci}"):
+            outs = [run(serial.asarray) for run, _ in progs]
+            serial.flush()
+            serial_out.append([o.to_numpy() for o in outs])
+
+    # interleaved: a seeded arbitrary interleaving across clients (each
+    # client's own stream stays FIFO — that is the arbitration model),
+    # flushed in another seeded order
+    inter = pum.device(width=32, fuse=True)
+    remaining = [list(range(3)) for _ in range(n_clients)]
+    order = []
+    while any(remaining):
+        ci = int(rng.integers(n_clients))
+        if remaining[ci]:
+            order.append((ci, remaining[ci].pop(0)))
+    handles = {}
+    for ci, pi in order:
+        with inter.client(f"c{ci}"):
+            handles[(ci, pi)] = streams[ci][pi][0](inter.asarray)
+    flush_order = list(range(n_clients))
+    rng.shuffle(flush_order)
+    for ci in flush_order:
+        with inter.client(f"c{ci}"):
+            inter.flush()
+
+    for ci, progs in enumerate(streams):
+        for pi, (_, want) in enumerate(progs):
+            np.testing.assert_array_equal(handles[(ci, pi)].to_numpy(),
+                                          want)
+            np.testing.assert_array_equal(serial_out[ci][pi], want)
+    assert inter.stats == serial.stats
+    assert inter.stats.latency_ns > 0
+    serial.close()
+    inter.close()
+
+
+def test_single_context_stats_bit_identical_to_legacy():
+    """One implicit context == the pre-concurrency engine: merging a
+    single stats shard must not perturb a single float."""
+    a = np.arange(512, dtype=np.uint64)
+    d1 = pum.device(width=32, fuse=True)
+    r1 = (d1.asarray(a) + a) * a
+    r1.to_numpy()
+    d2 = pum.device(width=32, fuse=True)
+    r2 = (d2.asarray(a) + a) * a
+    r2.to_numpy()
+    assert d1.stats == d2.stats
+    d1.close()
+    d2.close()
+
+
+# --------------------------------------------------------------------- #
+# capture: zero re-recording, cost-plane invariance
+# --------------------------------------------------------------------- #
+
+def test_capture_replays_without_rerecording():
+    with pum.device(width=32, fuse=True) as dev:
+        prog = dev.capture(lambda x, y: (x + y) * x)
+        a = np.arange(64, dtype=np.uint64)
+        for k in range(5):
+            got = prog(a + np.uint64(k), a)
+            want = ((2 * a + np.uint64(k)) * (a + np.uint64(k))) \
+                & np.uint64(0xFFFFFFFF)
+            np.testing.assert_array_equal(got, want)
+        assert prog.n_records == 1 and prog.n_replays == 4
+
+
+def test_capture_stats_match_uncaptured_recording():
+    a = np.arange(128, dtype=np.uint64)
+    b = a[::-1].copy()
+    cap = pum.device(width=32, fuse=True)
+    prog = cap.capture(lambda x, y: (x ^ y) + (x & y))
+    for _ in range(3):
+        prog(a, b)
+    raw = pum.device(width=32, fuse=True)
+    for _ in range(3):
+        x, y = raw.asarray(a), raw.asarray(b)
+        r = (x ^ y) + (x & y)
+        r.to_numpy()
+    assert cap.stats == raw.stats
+    cap.close()
+    raw.close()
+
+
+def test_capture_new_shape_rerecords():
+    with pum.device(width=32, fuse=True) as dev:
+        prog = dev.capture(lambda x: x + x)
+        prog(np.arange(64, dtype=np.uint64))
+        prog(np.arange(32, dtype=np.uint64))
+        assert prog.n_records == 2
+        prog(np.arange(64, dtype=np.uint64))
+        assert prog.n_records == 2 and prog.n_replays == 1
+
+
+def test_capture_requires_fused_device():
+    with pum.device(width=32, fuse=False) as dev:
+        with pytest.raises(ValueError, match="fused"):
+            dev.capture(lambda x: x + x)
+
+
+def test_capture_call_async(thread_guard):
+    with pum.device(width=32, fuse=True) as dev:
+        prog = dev.capture(lambda x: x * x)
+        a = np.arange(64, dtype=np.uint64)
+        h0 = prog.call_async(a)           # new shape: records, done handle
+        assert h0.done()
+        h1 = prog.call_async(a + np.uint64(1))
+        np.testing.assert_array_equal(h0.result(), a * a)
+        np.testing.assert_array_equal(
+            h1.result(timeout=30),
+            ((a + np.uint64(1)) ** 2) & np.uint64(0xFFFFFFFF))
+        assert prog.n_records == 1 and prog.n_replays >= 1
+
+
+# --------------------------------------------------------------------- #
+# thread stress: 8 clients on one shared device, widths 8/32/64
+# --------------------------------------------------------------------- #
+
+@pytest.mark.concurrent
+@pytest.mark.parametrize("width", [8, 32, 64])
+def test_eight_client_thread_stress(width, thread_guard):
+    """8 threads share one device, each recording random op programs and
+    flushing (sync or async at random); every stream's results must be
+    bit-exact to its numpy reference, with no cross-talk, no deadlock,
+    no leaked threads."""
+    dev = pum.device(width=width, fuse=True)
+    n_threads, n_iter = 8, 6
+    errors: list = []
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid):
+        try:
+            rng = np.random.default_rng(1000 * width + tid)
+            barrier.wait(timeout=30)
+            for it in range(n_iter):
+                run, want = random_program(rng, width, n=32 + 8 * tid)
+                out = run(dev.asarray)
+                if rng.random() < 0.5:
+                    h = dev.flush_async()
+                    h.result(timeout=60)
+                np.testing.assert_array_equal(out.to_numpy(), want,
+                                              err_msg=f"t{tid} it{it}")
+        except Exception as exc:
+            errors.append((tid, exc))
+
+    threads = [threading.Thread(target=worker, args=(i,),
+                                name=f"stress-{i}")
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    alive = [t.name for t in threads if t.is_alive()]
+    assert not alive, f"stress threads hung: {alive}"
+    assert not errors, errors[:3]
+    assert dev.stats.latency_ns > 0
+    dev.close()
+
+
+@pytest.mark.concurrent
+def test_thread_stress_stats_deterministic():
+    """The merged stats total is independent of thread scheduling: two
+    stress runs with the same per-thread streams land on identical
+    EngineStats (per-thread shards merge in deterministic order, and
+    client-named shards make the totals reproducible across runs)."""
+    def run_once():
+        dev = pum.device(width=32, fuse=True)
+        threads = []
+
+        def worker(tid):
+            rng = np.random.default_rng(tid)
+            with dev.client(f"w{tid}"):
+                for _ in range(4):
+                    run, want = random_program(rng, 32)
+                    out = run(dev.asarray)
+                    np.testing.assert_array_equal(out.to_numpy(), want)
+
+        for i in range(6):
+            t = threading.Thread(target=worker, args=(i,))
+            threads.append(t)
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads)
+        stats = dev.stats
+        dev.close()
+        return stats
+
+    assert run_once() == run_once()

@@ -265,6 +265,9 @@ def test_pipeline_cache_is_layout_keyed():
         x = dev.asarray(a)
         return np.asarray((x + a) ^ a)
 
+    # Hermetic: earlier suites may have filled the LRU to maxsize, where
+    # an insert evicts and currsize no longer grows.
+    fused_program._cached_pipeline.cache_clear()
     d32 = pum.device(width=16, fuse=True)
     d64 = pum.device(width=16, layout=64, fuse=True)
     batch(d32)

@@ -21,8 +21,9 @@ import sys
 # operator set IS the API.
 EXPECTED = {
     "repro.pum": [
-        "BackendSpec", "CounterBank", "Device", "EngineConfig",
-        "EngineStats", "LAYOUT32", "LAYOUT64", "PlaneLayout", "PumArray",
+        "BackendSpec", "CapturedProgram", "CounterBank", "Device",
+        "EngineConfig", "EngineStats", "FlushHandle", "LAYOUT32",
+        "LAYOUT64", "PlaneLayout", "PumArray",
         "ReliabilityConfig", "ReliabilityMap", "Tracer",
         "as_device", "asarray", "available_backends", "calibrate",
         "default_device", "device", "get_backend", "get_layout", "profile",
@@ -41,7 +42,8 @@ EXPECTED = {
     ],
     "Device": [
         "__enter__", "__exit__", "__init__", "__repr__", "asarray",
-        "calibrate", "charge", "counters", "flush", "latency_ms", "layout",
+        "calibrate", "capture", "charge", "client", "close", "counters",
+        "flush", "flush_async", "latency_ms", "layout",
         "reliability", "reset_stats", "stats", "width",
     ],
     "EngineConfig": [
