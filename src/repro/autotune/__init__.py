@@ -1,0 +1,44 @@
+"""repro.autotune — telemetry-driven adaptive execution planning.
+
+Closes the measure → decide → apply loop over the observability
+substrate PR 6 built (see ``docs/observability.md``):
+
+* **measure** — :class:`WorkloadProfile` summarizes a
+  :class:`~repro.telemetry.CounterBank` window (op mix, graph depth,
+  lane count, pipeline-cache hit rate, raw-bitmap share, plus the
+  controller's bus-utilization / stall-split / row-conflict / refresh
+  counters when present) into a frozen, JSON-round-trippable feature
+  vector;
+* **decide** — :class:`CostModel` scores candidate configs against a
+  profile with the roofline three-term decomposition
+  (``launch/roofline.py`` anchors), and :class:`Tuner` exhaustively
+  searches the discrete space — fused backend × plane layout ×
+  auto-flush bounds × REF postponing × crossbar lookahead — freezing
+  the deterministic winner into a :class:`TunedPlan`;
+* **apply** — ``Device.autotune()`` applies a plan's *execution* knobs
+  live (bit-exact, ``EngineStats``-identical by construction; the
+  cost-plane ``ref_postponing`` recommendation is an explicit opt-in),
+  and :class:`OnlineAutotuner` re-tunes from per-window counter deltas
+  when the :class:`DriftDetector` fires (exploit) or on a fixed cadence
+  (explore).
+
+``TunedPlan`` / ``Tuner`` / ``WorkloadProfile`` are re-exported on the
+public ``repro.pum`` surface; see ``docs/autotuning.md`` for the profile
+schema, the search space, and the invariants.
+"""
+
+from repro.autotune.cost import CostModel, Estimate
+from repro.autotune.profile import WorkloadProfile
+from repro.autotune.tuner import (DriftDetector, OnlineAutotuner,
+                                  SearchSpace, TunedPlan, Tuner)
+
+__all__ = [
+    "CostModel",
+    "DriftDetector",
+    "Estimate",
+    "OnlineAutotuner",
+    "SearchSpace",
+    "TunedPlan",
+    "Tuner",
+    "WorkloadProfile",
+]

@@ -33,6 +33,7 @@ be imported from anywhere in the stack without cycles.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any, Callable
 
@@ -116,15 +117,66 @@ def available_backends(capability: str | None = None) -> tuple[str, ...]:
                  if capability is None or capability in s.capabilities)
 
 
+# Selection overrides: capability -> pinned backend name. Consulted by
+# select_backend before the priority scan — the autotuner's hook for
+# steering callers that reach capability lookup without a Device (e.g.
+# fused_program.get_pipeline with backend=None). An override only wins
+# when its spec actually satisfies the query's capability/width/layout
+# constraints; otherwise the normal lookup proceeds, so a pinned name
+# can never produce a pipeline the program cannot run on.
+_SELECTION_OVERRIDE: dict[str, str] = {}
+
+
+def set_selection_override(capability: str, name: str | None) -> None:
+    """Pin (or with ``None`` unpin) the backend ``select_backend``
+    returns for single-capability ``capability`` queries. The pinned
+    backend is validated against each query's width/layout constraints
+    and skipped when it cannot satisfy them. Prefer the scoped
+    :func:`selection_override` context manager."""
+    if name is None:
+        _SELECTION_OVERRIDE.pop(capability, None)
+    else:
+        get_backend(name)  # loud on unknown names
+        _SELECTION_OVERRIDE[capability] = name
+
+
+def get_selection_override(capability: str) -> str | None:
+    """The currently pinned backend name for ``capability`` (or None)."""
+    return _SELECTION_OVERRIDE.get(capability)
+
+
+@contextlib.contextmanager
+def selection_override(capability: str, name: str | None):
+    """Scoped :func:`set_selection_override`: pin ``name`` for the
+    duration of the block, restoring the previous pin on exit. The
+    ``TunedPlan.selection_override()`` entry point."""
+    prev = _SELECTION_OVERRIDE.get(capability)
+    set_selection_override(capability, name)
+    try:
+        yield
+    finally:
+        set_selection_override(capability, prev)
+
+
 def select_backend(*, require, width: int | None = None,
                    layout=None) -> BackendSpec:
     """Capability lookup: the highest-priority *available* backend whose
     capabilities cover ``require``, whose ``max_width`` covers ``width``,
     and whose declared ``layouts`` include ``layout`` (a word-bit count
-    or a ``PlaneLayout``; ``None`` skips the filter). Raises
+    or a ``PlaneLayout``; ``None`` skips the filter). A
+    :func:`set_selection_override` pin for the capability takes
+    precedence when it satisfies the same constraints. Raises
     ``LookupError`` when nothing matches."""
     need = frozenset((require,) if isinstance(require, str) else require)
     wb = getattr(layout, "word_bits", layout)
+    if len(need) == 1:
+        pinned = _SELECTION_OVERRIDE.get(next(iter(need)))
+        if pinned is not None:
+            spec = _REGISTRY.get(pinned)
+            if spec is not None and need <= spec.capabilities \
+                    and (width is None or spec.max_width >= width) \
+                    and (wb is None or wb in spec.layouts):
+                return spec
     best: BackendSpec | None = None
     for spec in _REGISTRY.values():
         if not need <= spec.capabilities:

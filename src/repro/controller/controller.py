@@ -79,7 +79,7 @@ class MemoryController:
     def __init__(self, timings: DramTimings = DDR4_2400, n_banks: int = 16,
                  refresh: bool = True, trefi: float | None = None,
                  trfc: float | None = None, postponing: int = 1,
-                 open_page: bool = True):
+                 open_page: bool = True, lookahead: int = 8):
         self.t = timings
         self.n_banks = n_banks
         self.refresh = refresh
@@ -87,6 +87,14 @@ class MemoryController:
         self.trfc = timings.trfc if trfc is None else trfc
         self.postponing = postponing
         self.open_page = open_page
+        # Crossbar command-buffer depth (LiteDRAM cmd_buffer_depth):
+        # the default per-bank lookahead schedule_concurrent runs with.
+        # Never consulted by the single-stream schedule/batch_cost paths,
+        # so it is a pure execution knob (EngineConfig/the autotuner set
+        # it as cmd_buffer_lookahead).
+        if lookahead < 1:
+            raise ValueError(f"lookahead must be >= 1, got {lookahead}")
+        self.lookahead = lookahead
         self._batch_cache: dict[tuple, BankBatchCost] = {}
 
     # ------------------------------------------------------------------ #
@@ -168,7 +176,7 @@ class MemoryController:
                     progs.append(retarget_program(prog, b))
         return self.schedule(progs, refresh=refresh)
 
-    def schedule_concurrent(self, streams, lookahead: int = 8,
+    def schedule_concurrent(self, streams, lookahead: int | None = None,
                             auto_precharge: bool = False,
                             refresh: bool | None = None):
         """Schedule N concurrent client streams through the crossbar.
@@ -177,13 +185,16 @@ class MemoryController:
         single-bank ``list[Cmd]``, same contract as :meth:`schedule`).
         One :class:`~repro.controller.crossbar.ClientPort` is opened per
         stream; ports contending for a bank are granted round-robin with
-        at most ``lookahead`` pending sequences per bank machine.  Returns
+        at most ``lookahead`` pending sequences per bank machine (default:
+        the controller's own ``lookahead``).  Returns
         a :class:`~repro.controller.crossbar.CrossbarTrace` whose
         ``port_of`` attributes every issued command to its client.
 
         With a single stream this is byte-for-byte :meth:`schedule`
         (pinned by the golden-trace tests)."""
         from repro.controller.crossbar import Crossbar
+        if lookahead is None:
+            lookahead = self.lookahead
         xbar = Crossbar(timings=self.t, n_banks=self.n_banks,
                         n_ports=max(1, len(streams)), lookahead=lookahead,
                         auto_precharge=auto_precharge, refresh=self.refresh,

@@ -414,7 +414,8 @@ class PulsarEngine:
                  flush_memory_bytes: int | None = 1 << 30,
                  donate_leaves: bool = False, layout=None,
                  fused_backend: str | None = None,
-                 ref_postponing: int = 1, reliability=None):
+                 ref_postponing: int = 1, reliability=None,
+                 cmd_buffer_lookahead: int = 8):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -449,12 +450,19 @@ class PulsarEngine:
                 "ref_postponing requires controller='auto' (with "
                 "controller=None refresh is not modeled; a prebuilt "
                 "MemoryController sets postponing= itself)")
+        if cmd_buffer_lookahead < 1:
+            raise ValueError(f"cmd_buffer_lookahead must be >= 1, got "
+                             f"{cmd_buffer_lookahead}")
         if controller == "auto":
             from repro.controller import MemoryController
             controller = MemoryController(n_banks=banks,
-                                          postponing=ref_postponing)
+                                          postponing=ref_postponing,
+                                          lookahead=cmd_buffer_lookahead)
         self.controller = controller
         self.ref_postponing = ref_postponing
+        # Crossbar command-buffer depth for concurrent-stream scheduling;
+        # execution-only (never priced by the single-stream cost plane).
+        self.cmd_buffer_lookahead = cmd_buffer_lookahead
         self.cost = CostModel(row_bits=row_bits, controller=controller)
         self.db = success_db or default_db()
         # Concurrency state: one recording slot + one EngineStats shard
@@ -536,6 +544,11 @@ class PulsarEngine:
         # is a single `is None` check per flush, nothing per op.
         self.counters = CounterBank()
         self.tracer = None
+        # Autotuner hook: None (default) costs one `is None` check per
+        # flush; Device.autotune(online=True) installs an
+        # repro.autotune.OnlineAutotuner whose on_flush() closes the
+        # measure->decide->apply loop at flush granularity.
+        self.autotuner = None
         # Reliability plane: calibrated-map planning/placement plus the
         # flush-time injection + vote/retry loop (repro.reliability). None
         # (default) keeps every path exactly as before — the enabled check
@@ -881,6 +894,8 @@ class PulsarEngine:
             if self.tracer is not None:
                 self.counters.inc("engine.ops_recorded")
                 self.counters.inc(f"engine.op.{opcode}")
+                if raw:
+                    self.counters.inc("engine.raw_ops")
             args = []
             for x in resolved:
                 if isinstance(x, LazyArray) and x._value is None \
@@ -1209,6 +1224,13 @@ class PulsarEngine:
                 lz._engine = None
         if self.tracer is not None:
             self.counters.inc("engine.flushes")
+            self.counters.observe("engine.flush_lanes", g.n)
+            self.counters.observe("engine.flush_ops", len(program.ops))
+        if self.autotuner is not None:
+            # Per-flush decision point: the online autotuner counts
+            # windows / takes counter deltas here (reentrancy-guarded on
+            # its side — a re-tune's own flushes never recurse).
+            self.autotuner.on_flush(self)
 
     _PLANEWISE = frozenset({"and", "or", "xor"})
 

@@ -33,11 +33,19 @@ deprecated compat shim). Three pieces:
   replay a captured pipeline with zero re-recording. See the
   "Concurrent clients & async flush" section of
   ``docs/execution-pipeline.md``.
+* autotuning (``Device.autotune`` -> :class:`TunedPlan`, :class:`Tuner`,
+  :class:`WorkloadProfile`) — a :class:`WorkloadProfile` extracted from
+  measured counters (``Device.reset_counters`` / ``CounterBank``
+  snapshot deltas scope the window), a deterministic cost model, and an
+  exhaustive search over backend/layout/flush-threshold/REF/lookahead
+  knobs. Applied plans change only where/when programs run — outputs
+  and ``EngineStats`` stay bit-identical. See ``docs/autotuning.md``.
 
 See ``docs/api.md`` for the full surface, the Device lifecycle, the
 backend registry contract, and the old-call -> new-call migration table.
 """
 
+from repro.autotune import TunedPlan, Tuner, WorkloadProfile
 from repro.backends import (BackendSpec, available_backends, get_backend,
                             register_backend, select_backend,
                             unregister_backend)
@@ -66,6 +74,9 @@ __all__ = [
     "ReliabilityConfig",
     "ReliabilityMap",
     "Tracer",
+    "TunedPlan",
+    "Tuner",
+    "WorkloadProfile",
     "as_device",
     "asarray",
     "available_backends",

@@ -86,7 +86,8 @@ class Device:
                 donate_leaves=config.donate_leaves, layout=config.layout,
                 fused_backend=config.fused_backend,
                 ref_postponing=config.ref_postponing,
-                reliability=config.reliability)
+                reliability=config.reliability,
+                cmd_buffer_lookahead=config.cmd_buffer_lookahead)
         self.engine = _engine
         self._scalars: dict[tuple, np.ndarray] = {}
 
@@ -216,6 +217,119 @@ class Device:
 
     def reset_stats(self) -> None:
         self.engine.reset_stats()
+
+    def reset_counters(self) -> None:
+        """Clear the telemetry :class:`~repro.telemetry.CounterBank` in
+        place (the engine — and an attached reliability plane — keep
+        writing into the same bank), starting a fresh measurement window
+        without recreating the device. For overlapping windows on a live
+        device prefer ``counters.snapshot()`` + ``counters.delta()``."""
+        self.engine.counters.clear()
+
+    # -- autotuning ----------------------------------------------------- #
+
+    def autotune(self, profile=None, *, apply: bool = True,
+                 cost_plane: bool = False, space=None, tuner=None,
+                 online: bool = False, window_flushes: int = 16,
+                 explore_every: int = 8, drift_threshold: float = 0.5,
+                 save=None):
+        """Tune this device's execution config from measured telemetry.
+
+        ``profile`` is a :class:`~repro.autotune.WorkloadProfile` (or a
+        counter window to extract one from); by default it is taken from
+        the device's accumulated counters — run the workload under
+        :func:`profile` first (engine counters populate only while a
+        tracer is attached). The :class:`~repro.autotune.Tuner` searches
+        the discrete config space and returns the frozen
+        :class:`~repro.autotune.TunedPlan`; with ``apply=True`` (default)
+        the plan's *execution* knobs — fused backend, plane layout,
+        auto-flush bounds, crossbar lookahead — are applied live to this
+        device. Execution knobs change only where/when programs run:
+        outputs and ``EngineStats`` are bit-identical to the static
+        config (pinned by tests/autotune). ``cost_plane=True``
+        additionally applies the REF-postponing recommendation, which
+        changes the *modeled* refresh schedule and therefore EngineStats
+        — an explicit opt-in.
+
+        ``online=True`` installs an
+        :class:`~repro.autotune.OnlineAutotuner` on the engine: every
+        ``window_flushes`` flushes it profiles the counter delta and
+        re-tunes when the drift detector fires (exploit) or every
+        ``explore_every`` windows (explore). ``save=`` persists the plan
+        (``.json``/``.npz``, see ``TunedPlan.save``). Returns the plan
+        (``None`` with ``online=True`` before the first window closes).
+        """
+        from repro.autotune import (OnlineAutotuner, Tuner,
+                                    WorkloadProfile)
+        if not self.engine.fuse:
+            raise ValueError(
+                "autotune targets the fused execution pipeline; this "
+                "device runs eager (fuse=False)")
+        if tuner is None:
+            tuner = Tuner(space=space, drift_threshold=drift_threshold)
+        if online:
+            self.engine.autotuner = OnlineAutotuner(
+                self, tuner=tuner, window_flushes=window_flushes,
+                explore_every=explore_every,
+                drift_threshold=drift_threshold)
+            if profile is None:
+                return None  # first window closes at flush granularity
+        if profile is None:
+            profile = WorkloadProfile.from_device(self)
+        elif not isinstance(profile, WorkloadProfile):
+            profile = WorkloadProfile.from_counters(
+                profile, width=self.config.width,
+                word_bits=self.config.resolved_layout().word_bits)
+        plan = tuner.tune(profile, self.config)
+        if apply:
+            self._apply_plan(plan, cost_plane=cost_plane)
+        if online and self.engine.autotuner is not None:
+            self.engine.autotuner.plan = plan
+        if save is not None:
+            plan.save(save)
+        return plan
+
+    def _apply_plan(self, plan, *, cost_plane: bool = False,
+                    flush: bool = True) -> None:
+        """Reconfigure the live engine to a ``TunedPlan`` (the
+        ``calibrate()`` idiom: mutate the engine, drop stale caches,
+        replace ``self.config``). With ``flush=True`` pending graphs
+        flush first so backend/layout flips never split a recorded
+        program across lane formats; the online autotuner calls with
+        ``flush=False`` from inside the flush path and the
+        backend/layout switch is then deferred while graphs are
+        pending."""
+        cfg = plan.apply(self.config, cost_plane=cost_plane)
+        eng = self.engine
+        if flush:
+            eng.flush_all()
+        with eng._lock:
+            eng.flush_threshold = cfg.flush_threshold
+            eng.flush_memory_bytes = cfg.flush_memory_bytes
+            eng.cmd_buffer_lookahead = cfg.cmd_buffer_lookahead
+            pending = bool(eng._inflight) or any(
+                g is not None and getattr(g, "ops", None)
+                for g in eng._slots.values())
+            if pending:
+                cfg = cfg.replace(fused_backend=self.config.fused_backend,
+                                  layout=self.config.layout)
+            else:
+                eng.fused_backend = cfg.fused_backend
+                eng.layout = cfg.resolved_layout()
+            if cost_plane and cfg.ref_postponing != eng.ref_postponing \
+                    and cfg.controller == "auto":
+                from repro.controller import MemoryController
+                from repro.core.cost_model import CostModel as _EngineCost
+                eng.controller = MemoryController(
+                    n_banks=cfg.banks, postponing=cfg.ref_postponing,
+                    lookahead=cfg.cmd_buffer_lookahead)
+                eng.ref_postponing = cfg.ref_postponing
+                eng.cost = _EngineCost(row_bits=cfg.row_bits,
+                                       controller=eng.controller)
+            # Planning/batch caches were computed under the old config.
+            eng._best_cfg_cache.clear()
+            eng._batch_cache.clear()
+        self.config = cfg
 
     @property
     def latency_ms(self) -> float:
@@ -570,6 +684,7 @@ def as_device(obj) -> Device:
             layout=obj.layout, fused_backend=obj.fused_backend,
             ref_postponing=obj.ref_postponing,
             reliability=(None if obj.reliability is None
-                         else obj.reliability.config))
+                         else obj.reliability.config),
+            cmd_buffer_lookahead=obj.cmd_buffer_lookahead)
         return Device(cfg, _engine=obj)
     raise TypeError(f"cannot interpret {type(obj).__name__} as a Device")

@@ -42,6 +42,12 @@ class EngineConfig:
     * ``ref_postponing`` — REF commands batched per rank lockout by the
       ``"auto"`` controller's refresher (1..8; JEDEC allows postponing up
       to 8): longer but rarer refresh windows, priced by ``batch_cost``.
+    * ``cmd_buffer_lookahead`` — per-bank command-buffer depth of the
+      concurrent-client crossbar (LiteDRAM's ``cmd_buffer_depth``): how
+      many pending sequences each bank machine may hold when scheduling
+      concurrent streams. Threaded into the ``"auto"`` controller (its
+      ``schedule_concurrent`` default); purely an execution knob — the
+      single-stream cost plane never consults it.
     * ``donate_leaves`` — donate leaf device buffers to the fused trace
       (``jax.jit(..., donate_argnums=...)``): XLA may reuse them for
       intermediates, cutting pipeline peak memory. Results are
@@ -75,12 +81,16 @@ class EngineConfig:
     fused_backend: str | None = None
     ref_postponing: int = 1
     reliability: Any = None
+    cmd_buffer_lookahead: int = 8
 
     def __post_init__(self):
         if not 1 <= self.width <= 64:
             raise ValueError(f"width must be in [1, 64], got {self.width}")
         if self.flush_threshold is not None and self.flush_threshold < 1:
             raise ValueError("flush_threshold must be >= 1 or None")
+        if self.cmd_buffer_lookahead < 1:
+            raise ValueError("cmd_buffer_lookahead must be >= 1 (each "
+                             "bank machine holds at least one sequence)")
         if not 1 <= self.ref_postponing <= 8:
             raise ValueError("ref_postponing must be in [1, 8] (JEDEC "
                              "allows postponing up to 8 REFs)")

@@ -82,6 +82,58 @@ class CounterBank:
         return dict(h, mean=(h["total"] / h["count"] if h["count"] else 0.0),
                     buckets=dict(h["buckets"]))
 
+    # -- windows -------------------------------------------------------- #
+
+    def snapshot(self) -> "CounterBank":
+        """An independent deep copy of the bank's current state — the
+        start marker of a measurement window (pair with :meth:`delta`).
+        Mutating either bank afterwards never affects the other."""
+        s = CounterBank()
+        s._counters = dict(self._counters)
+        s._hists = {name: {"count": h["count"], "total": h["total"],
+                           "min": h["min"], "max": h["max"],
+                           "buckets": dict(h["buckets"])}
+                    for name, h in self._hists.items()}
+        return s
+
+    def delta(self, prev: "CounterBank") -> "CounterBank":
+        """This bank minus an earlier :meth:`snapshot` — the counters a
+        window accumulated, without resetting the live bank (so
+        long-lived devices can be profiled per window: the autotuner's
+        drift windows are exactly these deltas). Counters subtract;
+        histograms subtract count/total/buckets (their ``mean`` stays
+        exact); a window's true ``min``/``max`` are not recoverable from
+        two cumulative states, so the live bank's values are kept.
+        Zero-change entries are dropped."""
+        out = CounterBank()
+        for name, v in self._counters.items():
+            dv = v - prev._counters.get(name, 0)
+            if dv:
+                out._counters[name] = dv
+        for name, h in self._hists.items():
+            p = prev._hists.get(name)
+            count = h["count"] - (p["count"] if p else 0)
+            if not count:
+                continue
+            buckets = dict(h["buckets"])
+            if p:
+                for k, n in p["buckets"].items():
+                    buckets[k] = buckets.get(k, 0) - n
+            out._hists[name] = {
+                "count": count,
+                "total": h["total"] - (p["total"] if p else 0.0),
+                "min": h["min"], "max": h["max"],
+                "buckets": {k: n for k, n in buckets.items() if n},
+            }
+        return out
+
+    def clear(self) -> None:
+        """Reset every counter and histogram **in place** (holders of a
+        reference to this bank — the engine, an attached reliability
+        plane — keep writing into the same object)."""
+        self._counters.clear()
+        self._hists.clear()
+
     # -- aggregate views ------------------------------------------------ #
 
     def merge(self, other: "CounterBank") -> "CounterBank":

@@ -1,0 +1,146 @@
+"""The autotuning invariant: a tuned plan changes only where/when
+programs run — outputs stay bit-exact and ``EngineStats`` charges stay
+identical to the static default, at every width, in eager and fused
+modes, and with the reliability plane injecting faults."""
+
+import numpy as np
+import pytest
+
+import repro.pum as pum
+from repro.autotune import SearchSpace, Tuner, WorkloadProfile
+from repro.reliability import ReliabilityConfig, calibrate
+
+pytestmark = pytest.mark.autotune
+
+
+def _operands(width, n, seed):
+    rng = np.random.default_rng(seed)
+    hi = (1 << width) - 1
+    a = rng.integers(0, hi, n, dtype=np.uint64)
+    b = rng.integers(0, hi, n, dtype=np.uint64)
+    a[:2] = (0, hi)
+    b[:2] = (hi, 0)
+    b[::7] = 0  # div-by-zero lanes
+    return a, b
+
+
+def run_workload(dev, width, seed=7):
+    """Mixed value + raw workload; returns every materialized output."""
+    a_np, b_np = _operands(width, 4096, seed)
+    a, b = dev.asarray(a_np), dev.asarray(b_np)
+    q, r = divmod(a, b)
+    outs = [
+        (a + b).to_numpy(), (a * b).to_numpy(), (a - b).to_numpy(),
+        ((a & b) | (a ^ b)).to_numpy(), q.to_numpy(), r.to_numpy(),
+        (a < b).to_numpy(), (a >= b).to_numpy(),
+        a.popcount().to_numpy(),
+    ]
+    dev.flush()
+    return outs
+
+
+def tuned_device(width, fuse, **cfg):
+    """Build a device, profile a priming run, autotune from the measured
+    counters, and hand it back with fresh stats for the scored run."""
+    dev = pum.device(width=width, fuse=fuse, **cfg)
+    if fuse:
+        with pum.profile(dev):
+            run_workload(dev, width, seed=3)
+        dev.autotune(apply=True)
+    dev.reset_stats()
+    return dev
+
+
+@pytest.mark.parametrize("width", [8, 32, 64])
+@pytest.mark.parametrize("fuse", [True, False])
+def test_tuned_matches_static(width, fuse):
+    static = pum.device(width=width, fuse=fuse)
+    want = run_workload(static, width)
+    want_stats = static.stats.as_dict()
+    static.close()
+
+    tuned = tuned_device(width, fuse)
+    got = run_workload(tuned, width)
+    got_stats = tuned.stats.as_dict()
+    tuned.close()
+
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert got_stats == want_stats
+
+
+def test_tuned_plan_is_nontrivial_on_raw_heavy_width32():
+    """Guard against the parity test passing vacuously: on this workload
+    the tuner must actually pick a non-default config (the raw logic ops
+    reward the unsplit 64-bit layout)."""
+    dev = pum.device(width=32, fuse=True)
+    with pum.profile(dev):
+        a = dev.asarray(np.arange(8192, dtype=np.uint64) * 0x9E3779B9)
+        b = dev.asarray(np.arange(8192, dtype=np.uint64) ^ 0xDEADBEEF)
+        for _ in range(4):
+            ((a & b) | (a ^ b)).to_numpy()
+    plan = dev.autotune(apply=False)
+    assert plan.non_default(dev.config) != {}
+    dev.close()
+
+
+@pytest.mark.parametrize("width", [8, 32])
+def test_tuned_matches_static_under_reliability_injection(width):
+    """Fault injection + replication-vote correction runs on both sides;
+    the tuned plan must not perturb the corrected outputs or the charged
+    stats."""
+    rmap = calibrate("M", banks=16, n_subarrays=2, n_columns=32,
+                     n_patterns=2, seed=13)
+    rcfg = ReliabilityConfig(map=rmap, inject=True, seed=5)
+
+    static = pum.device(width=width, fuse=True, reliability=rcfg)
+    want = run_workload(static, width)
+    want_stats = static.stats.as_dict()
+    static.close()
+
+    tuned = tuned_device(width, True, reliability=rcfg)
+    got = run_workload(tuned, width)
+    got_stats = tuned.stats.as_dict()
+    tuned.close()
+
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+    assert got_stats == want_stats
+
+
+def test_every_searched_backend_is_parity_safe():
+    """Brute force: pin each searchable (backend, layout) pair through a
+    TunedPlan apply and check outputs + stats against the default."""
+    width = 16
+    static = pum.device(width=width, fuse=True)
+    want = run_workload(static, width)
+    want_stats = static.stats.as_dict()
+    static.close()
+
+    for cand in Tuner().candidates(pum.EngineConfig(width=width)):
+        dev = pum.device(width=width, fuse=True)
+        plan = Tuner(space=SearchSpace(
+            backends=(cand.fused_backend,), layouts=(cand.word_bits,),
+            flush_thresholds=(cand.flush_threshold,),
+            cmd_buffer_lookahead=(cand.cmd_buffer_lookahead,),
+        )).tune(
+            WorkloadProfile(ops=100, flushes=1, ops_per_flush=100.0,
+                            lanes=4096.0, op_mix={"add": 1.0},
+                            width=width),
+            dev.config)
+        dev._apply_plan(plan)
+        got = run_workload(dev, width)
+        got_stats = dev.stats.as_dict()
+        dev.close()
+        label = (cand.fused_backend, cand.word_bits)
+        for w, g in zip(want, got):
+            np.testing.assert_array_equal(w, g, err_msg=str(label))
+        assert got_stats == want_stats, label
+
+
+def test_eager_device_rejects_autotune_but_not_reset():
+    dev = pum.device(width=8, fuse=False)
+    with pytest.raises(ValueError, match="fuse"):
+        dev.autotune()
+    dev.reset_counters()  # counter windows work regardless of mode
+    dev.close()

@@ -1,0 +1,163 @@
+"""WorkloadProfile extraction: counters -> features, round trips, windows."""
+
+import numpy as np
+import pytest
+
+import repro.pum as pum
+from repro.autotune import WorkloadProfile
+from repro.telemetry import CounterBank
+
+pytestmark = pytest.mark.autotune
+
+
+def _bank(**counters):
+    b = CounterBank()
+    for k, v in counters.items():
+        b.inc(k.replace("__", "."), v)
+    return b
+
+
+def synthetic_bank():
+    b = CounterBank()
+    b.inc("engine.ops_recorded", 100)
+    b.inc("engine.op.add", 60)
+    b.inc("engine.op.xor", 40)
+    b.inc("engine.raw_ops", 40)
+    b.inc("engine.flushes", 4)
+    b.inc("engine.autoflush.ops", 2)
+    b.inc("engine.pipeline_cache.hit", 3)
+    b.inc("engine.pipeline_cache.miss", 1)
+    b.inc("cmd_bus_utilization", 0.25)
+    b.inc("wall_ns", 1000.0)
+    b.inc("stall.trrd_ns", 100.0)
+    b.inc("stall.tfaw_ns", 50.0)
+    b.inc("row.hit", 6)
+    b.inc("row.miss", 2)
+    b.inc("row.conflict", 2)
+    b.inc("refresh.stall_ns", 40.0)
+    for lanes in (4096, 4096, 8192, 8192):
+        b.observe("engine.flush_lanes", lanes)
+    return b
+
+
+def test_feature_extraction():
+    p = WorkloadProfile.from_counters(synthetic_bank(), width=32,
+                                      word_bits=32)
+    assert p.ops == 100 and p.flushes == 4
+    assert p.ops_per_flush == 25.0
+    assert p.lanes == 6144.0
+    assert p.op_mix == {"add": 0.6, "xor": 0.4}
+    assert p.raw_fraction == 0.4
+    assert p.cache_hit_rate == 0.75
+    assert p.autoflush_ops_fraction == 0.5
+    assert p.bus_utilization == 0.25
+    assert p.stall_trrd_fraction == 0.1
+    assert p.stall_tfaw_fraction == 0.05
+    assert p.row_conflict_ratio == 0.2
+    assert p.refresh_fraction == 0.04
+    assert p.width == 32 and p.word_bits == 32
+
+
+def test_empty_window_raises_with_hint():
+    with pytest.raises(ValueError, match="pum.profile"):
+        WorkloadProfile.from_counters(CounterBank())
+
+
+def test_accepts_as_dict_payload_and_plain_mapping():
+    bank = synthetic_bank()
+    a = WorkloadProfile.from_counters(bank)
+    b = WorkloadProfile.from_counters(bank.as_dict())
+    assert a == b
+    # A plain mapping loses histograms (lanes fall back to 0) but the
+    # counter-derived features agree.
+    c = WorkloadProfile.from_counters(bank.as_dict()["counters"])
+    assert c.op_mix == a.op_mix and c.ops == a.ops and c.lanes == 0.0
+
+
+def test_json_round_trip_and_fingerprint():
+    import json
+    p = WorkloadProfile.from_counters(synthetic_bank())
+    q = WorkloadProfile.from_dict(json.loads(json.dumps(p.as_dict())))
+    assert q == p
+    assert q.fingerprint() == p.fingerprint()
+    drifted = WorkloadProfile.from_dict(
+        dict(p.as_dict(), raw_fraction=0.9))
+    assert drifted.fingerprint() != p.fingerprint()
+
+
+def test_from_device_measures_real_workload():
+    with pum.device(width=16, fuse=True) as dev:
+        with pum.profile(dev):
+            x = dev.asarray(np.arange(512, dtype=np.uint64) & 0xFFFF)
+            ((x + 5) * x ^ x).to_numpy()
+        p = WorkloadProfile.from_device(dev)
+    assert p.ops >= 3 and p.flushes >= 1
+    assert p.lanes == 512.0
+    assert set(p.op_mix) >= {"add", "mul", "xor"}
+    assert abs(sum(p.op_mix.values()) - 1.0) < 1e-12
+    assert p.width == 16 and p.word_bits == 32
+
+
+def test_unprofiled_device_raises():
+    with pum.device(width=16, fuse=True) as dev:
+        x = dev.asarray(np.arange(64, dtype=np.uint64))
+        (x + 1).to_numpy()  # no tracer attached -> no counters
+        with pytest.raises(ValueError, match="pum.profile"):
+            WorkloadProfile.from_device(dev)
+
+
+# -- CounterBank windows (snapshot / delta / clear) --------------------- #
+
+
+def test_snapshot_is_independent():
+    b = _bank(a=1)
+    b.observe("h", 4)
+    s = b.snapshot()
+    b.inc("a", 2)
+    b.observe("h", 16)
+    assert s.get("a") == 1 and b.get("a") == 3
+    assert s.histogram("h")["count"] == 1
+    assert b.histogram("h")["count"] == 2
+
+
+def test_delta_subtracts_counters_and_histograms():
+    b = CounterBank()
+    b.inc("x", 5)
+    b.observe("lat", 2)
+    s = b.snapshot()
+    b.inc("x", 7)
+    b.inc("new", 1)
+    b.observe("lat", 8)
+    b.observe("lat", 8)
+    d = b.delta(s)
+    assert d.get("x") == 7 and d.get("new") == 1
+    h = d.histogram("lat")
+    assert h["count"] == 2 and h["total"] == 16 and h["mean"] == 8
+    # zero-change entries are dropped
+    assert "x" in d and len(d.as_dict()["counters"]) == 2
+
+
+def test_delta_of_identical_snapshots_is_empty():
+    b = synthetic_bank()
+    d = b.delta(b.snapshot())
+    assert len(d) == 0
+
+
+def test_clear_resets_in_place():
+    b = synthetic_bank()
+    alias = b  # holders keep writing into the same object
+    b.clear()
+    assert len(alias) == 0
+    alias.inc("fresh", 1)
+    assert b.get("fresh") == 1
+
+
+def test_device_reset_counters_preserves_bank_identity():
+    with pum.device(width=8, fuse=True) as dev:
+        bank = dev.counters
+        with pum.profile(dev):
+            (dev.asarray(np.arange(32, dtype=np.uint64)) + 1).to_numpy()
+        assert bank.get("engine.ops_recorded") > 0
+        dev.reset_counters()
+        assert dev.counters is bank  # cleared in place, not rebound
+        assert len(bank) == 0

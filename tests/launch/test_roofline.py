@@ -1,0 +1,135 @@
+"""Pin launch/roofline.py estimates on hand-computable shapes.
+
+Every expected value here is written out as explicit arithmetic from the
+model-config fields so a reviewer can recompute it by hand; drift in the
+analytic FLOPs/bytes model or the term assembly fails loudly.
+"""
+
+import pytest
+
+from repro.config.base import LM_SHAPES, get_config
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   RooflinePoint, _attn_flops_per_token,
+                                   _ffn_flops_per_token,
+                                   _layer_flops_per_token, analytic_flops,
+                                   analyze_record, loop_trip, model_flops,
+                                   to_markdown)
+
+ARCH = "qwen1.5-0.5b"  # dense GQA, no windows -> fully hand-computable
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config(ARCH)
+
+
+def test_attn_flops_gqa_closed_form(cfg):
+    # proj = 2*d*dh*(h + 2*h_kv) + 2*h*dh*d; attn = 4*ctx*h*dh
+    d, h, hkv, dh = 1024, 16, 16, 64
+    assert (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim) == (d, h, hkv, dh)
+    proj = 2 * d * dh * (h + 2 * hkv) + 2 * h * dh * d
+    assert proj == 8_388_608
+    for ctx in (0.0, 2048.0):
+        expected = proj + 4 * ctx * h * dh
+        assert _attn_flops_per_token(cfg, ctx) == expected
+
+
+def test_ffn_flops_dense_closed_form(cfg):
+    assert cfg.d_ff == 2816 and not cfg.moe
+    assert _ffn_flops_per_token(cfg) == 6 * 1024 * 2816 == 17_301_504
+
+
+def test_layer_flops_is_attn_plus_ffn(cfg):
+    ctx = 4096.0 / 2
+    expected = _attn_flops_per_token(cfg, ctx) + _ffn_flops_per_token(cfg)
+    assert _layer_flops_per_token(cfg, 0, ctx) == expected
+    # All 24 layers identical (no sliding windows on this arch).
+    assert _layer_flops_per_token(cfg, 23, ctx) == expected
+
+
+def test_analytic_flops_train_assembly(cfg):
+    # train: tokens = B*S, ctx = S/2, mult = 3 + 1 (remat=full),
+    # head = 2*d*padded_vocab*tokens*3
+    shape = LM_SHAPES["train_4k"]
+    tokens = shape.global_batch * shape.seq_len
+    per_tok = 24 * (_attn_flops_per_token(cfg, shape.seq_len / 2)
+                    + _ffn_flops_per_token(cfg))
+    assert cfg.remat == "full"
+    head = 2 * cfg.d_model * cfg.padded_vocab * tokens * 3.0
+    assert analytic_flops(ARCH, "train_4k") == per_tok * tokens * 4.0 + head
+
+
+def test_analytic_flops_decode_assembly(cfg):
+    # decode: one token per sequence against the full cache context.
+    shape = LM_SHAPES["decode_32k"]
+    tokens = shape.global_batch
+    per_tok = 24 * (_attn_flops_per_token(cfg, float(shape.seq_len))
+                    + _ffn_flops_per_token(cfg))
+    head = 2 * cfg.d_model * cfg.padded_vocab * tokens
+    assert analytic_flops(ARCH, "decode_32k") == per_tok * tokens + head
+
+
+def test_model_flops_classic_estimators(cfg):
+    n = cfg.param_count()
+    assert model_flops(ARCH, "train_4k") == 6.0 * n * 256 * 4096
+    assert model_flops(ARCH, "prefill_32k") == 2.0 * n * 32 * 32768
+    assert model_flops(ARCH, "decode_32k") == 2.0 * n * 128
+
+
+def test_loop_trip_scanned_layers(cfg):
+    # Uniform dense stack: the layer scan dominates on every shape.
+    n_scan = cfg.n_layers - cfg.first_dense_layers
+    assert n_scan == 24
+    for shape in ("train_4k", "prefill_32k", "decode_32k"):
+        assert loop_trip(ARCH, shape) == n_scan
+
+
+def test_analyze_record_term_assembly():
+    rec = {
+        "arch": ARCH, "shape": "decode_32k", "mesh": "2x16x16",
+        "n_devices": 512, "flops": 1.0e15,
+        "collectives": {"total_weighted": 9.0e9, "region_weighted": 4.0e9},
+    }
+    p = analyze_record(rec)
+    assert p.compute_s == analytic_flops(ARCH, "decode_32k") / (512 * PEAK_FLOPS)
+    # region bytes replayed once per scanned layer, main bytes once
+    assert p.collective_s == (5.0e9 + 4.0e9 * 24) / ICI_BW
+    assert p.hlo_flops_raw == 1.0e15
+    assert p.model_flops == model_flops(ARCH, "decode_32k")
+    assert p.memory_s > 0
+
+
+def test_roofline_point_derived_properties():
+    p = RooflinePoint(arch="x", shape="y", mesh="2x16x16",
+                      compute_s=2e-3, memory_s=5e-3, collective_s=1e-3,
+                      model_flops=512 * PEAK_FLOPS * 1e-3,
+                      analytic_flops_total=512 * PEAK_FLOPS * 4e-3,
+                      hlo_flops_raw=-1.0)
+    assert p.dominant == "memory"
+    assert p.bound_s == 5e-3
+    assert p.useful_ratio == pytest.approx(0.25)
+    # useful_s = model_flops/(512*PEAK) = 1e-3; fraction = 1e-3 / 5e-3
+    assert p.roofline_fraction == pytest.approx(0.2)
+
+
+def test_markdown_table_shape():
+    p = RooflinePoint(arch="a", shape="s", mesh="m", compute_s=1e-3,
+                      memory_s=2e-3, collective_s=3e-3, model_flops=1e12,
+                      analytic_flops_total=2e12, hlo_flops_raw=1e12)
+    failed = RooflinePoint(arch="b", shape="s", mesh="m", compute_s=0,
+                           memory_s=0, collective_s=0, model_flops=0,
+                           analytic_flops_total=0, hlo_flops_raw=-1,
+                           status="compile_error")
+    md = to_markdown([p, failed])
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch |") and len(lines) == 4
+    assert "collective" in lines[2] and "FAILED" in lines[3]
+
+
+def test_autotune_cost_model_anchors_to_roofline_constants():
+    """repro.autotune's cost model derives its host-side rates from the
+    same hardware roof — the anchoring the planner's estimates rely on."""
+    from repro.autotune.cost import HOST_BW, HOST_WORD_RATE
+    assert HOST_BW == HBM_BW / 16
+    assert HOST_WORD_RATE == PEAK_FLOPS / 1e5

@@ -25,6 +25,7 @@ EXPECTED = {
         "EngineConfig", "EngineStats", "FlushHandle", "LAYOUT32",
         "LAYOUT64", "PlaneLayout", "PumArray",
         "ReliabilityConfig", "ReliabilityMap", "Tracer",
+        "TunedPlan", "Tuner", "WorkloadProfile",
         "as_device", "asarray", "available_backends", "calibrate",
         "default_device", "device", "get_backend", "get_layout", "profile",
         "register_backend", "select_backend", "unregister_backend",
@@ -42,12 +43,13 @@ EXPECTED = {
     ],
     "Device": [
         "__enter__", "__exit__", "__init__", "__repr__", "asarray",
-        "calibrate", "capture", "charge", "client", "close", "counters",
-        "flush", "flush_async", "latency_ms", "layout",
-        "reliability", "reset_stats", "stats", "width",
+        "autotune", "calibrate", "capture", "charge", "client", "close",
+        "counters", "flush", "flush_async", "latency_ms", "layout",
+        "reliability", "reset_counters", "reset_stats", "stats", "width",
     ],
     "EngineConfig": [
-        "backend", "banks", "chained", "controller", "donate_leaves",
+        "backend", "banks", "chained", "cmd_buffer_lookahead",
+        "controller", "donate_leaves",
         "flush_memory_bytes", "flush_threshold", "fuse", "fused_backend",
         "layout", "mfr", "ref_postponing", "reliability", "row_bits",
         "seed", "success_db", "use_pulsar", "width",
