@@ -175,9 +175,9 @@ def _bench_fused_mul64() -> list[Row]:
             f"width {width})"),
         row("engine.fused_mul64", us_f,
             f"{16 * n / us_f:.0f} M ops*elem/s ({us_e / us_f:.1f}x over "
-            f"eager; 64-bit plane layout via words-cpu-64 — capability "
-            f"row: the NumPy word path pays the shared-divider divmod, "
-            f"the TPU vertical evaluator is the wide perf path; "
+            f"eager; 64-bit plane layout via words-cpu-64 — the jitted "
+            f"uint32-pair evaluator: carry-chained add/sub/mul and "
+            f"Knuth-division divmod on lane pairs, one XLA trace; "
             f"bit_exact+stats_match={ok})"),
     ]
 
@@ -335,16 +335,59 @@ def _bench_autotuned() -> list[Row]:
     ]
 
 
+def _bench_leaf_cache() -> list[Row]:
+    """The device-resident leaf cache, cold vs warm: the same raw 16-op
+    program flushed repeatedly over the same three 2M-word bitmaps. Cold
+    (``leaf_cache_bytes=0``) re-stages every operand's wire snapshot per
+    flush; warm (default cache) hits on pointer+fingerprint and serves
+    the device-resident buffers — the flush moves no leaf bytes at all.
+    Outputs and EngineStats are asserted identical (the cache is an
+    execution detail, never a semantics knob)."""
+    rng = np.random.default_rng(31)
+    n = 32 * W
+    a, b, c = (rng.integers(0, 2**64, n, dtype=np.uint64) for _ in range(3))
+    cold = pum.device(width=32, fuse=True, leaf_cache_bytes=0)
+    warm = pum.device(width=32, fuse=True)
+
+    def run_cold():
+        return _engine_rawprog16(cold, a, b, c).to_numpy()
+
+    def run_warm():
+        return _engine_rawprog16(warm, a, b, c).to_numpy()
+
+    want, got = run_cold(), run_warm()  # warm-up: compile + cache fill
+    ok = bool(np.array_equal(want, got)) and cold.stats == warm.stats
+    us_c, _ = timed_us(run_cold, repeat=7)
+    us_w, _ = timed_us(run_warm, repeat=7)
+    with pum.profile(warm):
+        run_warm()
+    record_counters("engine.leaf_cache_warm", warm.counters)
+    mb = 3 * n * 8 / 1e6
+    return [
+        row("engine.leaf_cache_cold", us_c,
+            f"leaf_cache_bytes=0: every flush re-stages ~{mb:.0f} MB of "
+            f"leaf wire"),
+        row("engine.leaf_cache_warm", us_w,
+            f"{us_c / us_w:.2f}x vs cold (pointer+fingerprint hits serve "
+            f"the device-resident leaf buffers, zero bytes staged; "
+            f"bit_exact+stats_match={ok})"),
+    ]
+
+
 def _bench_app_kernels() -> list[Row]:
-    """realworld packed-bitmap kernels, eager vs fused routing (the raw
-    planewise path): host wall time of the whole kernel call; each call
-    self-verifies against direct NumPy."""
+    """realworld packed-bitmap kernels at paper-scale operand sizes, eager
+    vs fused routing (the raw planewise path): host wall time of the device
+    path (the warm-up call verifies against direct NumPy once; the timed
+    calls pass verify=False so the oracle is outside the timed region).
+    BMI ANDs 30 x 2 MiB daily bitmaps; KCS star-extends 8192 6-cliques of
+    a 2048-vertex graph through the bulk stacked-operand path — repeat
+    calls reuse the memoized stacks, so fused flushes hit the leaf cache."""
     rng = np.random.default_rng(13)
-    bitmaps = rng.integers(0, 2**64, (30, 1 << 14), dtype=np.uint64)
-    n = 40
+    bitmaps = rng.integers(0, 2**64, (30, 1 << 18), dtype=np.uint64)
+    n = 2048
     adj = np.triu((rng.random((n, n)) < 0.3).astype(np.uint8), 1)
     adj = adj + adj.T
-    cliques = [(0, 1, 2), (3, 4, 5), (6, 7, 8), (9, 10, 11)]
+    cliques = [tuple(cl) for cl in rng.integers(0, n, (8192, 6))]
 
     rows: list[Row] = []
     for name, fn, args in (
@@ -352,16 +395,18 @@ def _bench_app_kernels() -> list[Row]:
             ("kclique", realworld.kclique_star, (adj, cliques))):
         eager = pum.device(width=32, fuse=False)
         fused = pum.device(width=32, fuse=True)
-        fn(fused, *args)  # warm-up: compiles the fused pipeline once
-        us_e, _ = timed_us(lambda: fn(eager, *args))
-        us_f, _ = timed_us(lambda: fn(fused, *args))
+        fn(fused, *args)  # warm-up: verifies + compiles the fused pipeline
+        fn(eager, *args)  # warm-up: verifies the eager path once too
+        us_e, _ = timed_us(lambda: fn(eager, *args, verify=False))
+        us_f, _ = timed_us(lambda: fn(fused, *args, verify=False))
         rows.append(row(f"app.{name}_eager", us_e, "per-op dispatch"))
+        # The ratio is computed from the measured rows (never baked into
+        # the string): bench_compare gates app.*_fused at >= 1.0x eager.
         rows.append(row(f"app.{name}_fused", us_f,
                         f"{us_e / us_f:.2f}x vs eager (raw planewise fused "
-                        f"path; CPU AND-chains are memory-bound so snapshot"
-                        f"+dispatch overhead shows — the fused win is on "
-                        f"arithmetic programs and the TPU transpose-once "
-                        f"path)"))
+                        f"path: one jitted flush per call, leaf-cache hits "
+                        f"serve the device-resident bitmap uploads with "
+                        f"zero bytes staged)"))
     return rows
 
 
@@ -413,5 +458,6 @@ def run() -> list[Row]:
     rows.extend(_bench_sharded_prog16())
     rows.extend(_bench_async_flush())
     rows.extend(_bench_autotuned())
+    rows.extend(_bench_leaf_cache())
     rows.extend(_bench_app_kernels())
     return rows

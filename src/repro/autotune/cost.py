@@ -38,6 +38,8 @@ HOST_WORD_RATE = PEAK_FLOPS / 1e5  # word-ops/s — scalar/SIMD host lanes
 # validate the others, mirroring its priority=-10 registration).
 BACKEND_SPEED = {
     "words-cpu": (1.0, 1.0),
+    # words-cpu-64 runs the jitted uint32-pair evaluator (carry chained
+    # across lane pairs) — same host anchors as the 32-bit word path.
     "words-cpu-64": (1.0, 1.0),
     "shard-words": (1.6, 1.6),
     "pallas-tpu": (8.0, 16.0),
@@ -47,9 +49,12 @@ BACKEND_SPEED = {
 }
 DEFAULT_SPEED = (0.5, 1.0)         # unknown registered backends
 
-# Fixed per-event costs (seconds): one staged dispatch, one jit trace.
+# Fixed per-event costs (seconds): one staged dispatch, one jit trace,
+# one eager per-op dispatch (backend call + cost-plane charge — what a
+# fuse=False candidate pays instead of flush overhead and jit traces).
 FLUSH_OVERHEAD_S = 50e-6
 COMPILE_S = 30e-3
+EAGER_DISPATCH_S = 50e-6
 
 # Word-domain cost weights per fused opcode (multiples of one plane op
 # per lane; ``width``-dependent opcodes scale in :func:`_op_weight`).
@@ -97,16 +102,23 @@ class CostModel:
 
     ``estimate`` accepts any object with the candidate knob attributes
     (``fused_backend``, ``word_bits``, ``flush_threshold``,
-    ``flush_memory_bytes``, ``ref_postponing``, ``cmd_buffer_lookahead``)
-    — both the tuner's internal candidates and a frozen
-    :class:`~repro.autotune.TunedPlan` qualify.
+    ``flush_memory_bytes``, ``ref_postponing``, ``cmd_buffer_lookahead``,
+    and optionally ``fuse`` — absent means fused) — both the tuner's
+    internal candidates and a frozen :class:`~repro.autotune.TunedPlan`
+    qualify. ``fuse=False`` candidates are priced as the eager per-op
+    path: no jit traces and no leaf staging, but ``eager_dispatch_s``
+    per recorded op — the term that lets a window whose measured
+    ``leaf_bytes_per_flush`` dominates (memory-bound raw AND chains over
+    fresh bitmaps) flip the recommendation off the fused pipeline.
     """
 
     def __init__(self, *, speed=None, flush_overhead_s: float =
-                 FLUSH_OVERHEAD_S, compile_s: float = COMPILE_S):
+                 FLUSH_OVERHEAD_S, compile_s: float = COMPILE_S,
+                 eager_dispatch_s: float = EAGER_DISPATCH_S):
         self.speed = dict(BACKEND_SPEED if speed is None else speed)
         self.flush_overhead_s = flush_overhead_s
         self.compile_s = compile_s
+        self.eager_dispatch_s = eager_dispatch_s
 
     # -- candidate-adjusted workload geometry --------------------------- #
 
@@ -167,16 +179,33 @@ class CostModel:
             * depth * flushes
         memory_s = byte_traffic / (HOST_BW * bw)
 
-        # Overhead: staged dispatches (candidate thresholds re-chunk the
-        # window, see _flush_geometry) plus compile amortization. A
-        # candidate whose chunking differs from the measured structure
-        # pays at least one fresh jit trace over the window.
-        depth_c, n_flushes = self._flush_geometry(profile, knobs, lanes)
-        miss_rate = 1.0 - profile.cache_hit_rate
-        if abs(depth_c - depth) > 0.5:
-            miss_rate = max(miss_rate, 1.0 / n_flushes)
-        overhead_s = n_flushes * self.flush_overhead_s \
-            + miss_rate * n_flushes * self.compile_s
+        if getattr(knobs, "fuse", True):
+            # Leaf staging: the snapshot/upload bytes the flush path
+            # actually measured (net of leaf-cache hits and elided
+            # snapshots), re-paid per flush through host DRAM. Folded
+            # into the memory term — it is data movement, and it is the
+            # cost eager execution never pays (operands stream in place,
+            # un-snapshotted).
+            memory_s += profile.leaf_bytes_per_flush * flushes / HOST_BW
+
+            # Overhead: staged dispatches (candidate thresholds re-chunk
+            # the window, see _flush_geometry) plus compile amortization.
+            # A candidate whose chunking differs from the measured
+            # structure pays at least one fresh jit trace over the window.
+            depth_c, n_flushes = self._flush_geometry(profile, knobs,
+                                                      lanes)
+            miss_rate = 1.0 - profile.cache_hit_rate
+            if abs(depth_c - depth) > 0.5:
+                miss_rate = max(miss_rate, 1.0 / n_flushes)
+            overhead_s = n_flushes * self.flush_overhead_s \
+                + miss_rate * n_flushes * self.compile_s
+        else:
+            # Eager (fuse=False): the host word dataplane at the base
+            # anchors — no fused backend, no jit traces, no leaf
+            # snapshots — but one dispatch per recorded op.
+            compute_s = word_ops / HOST_WORD_RATE
+            memory_s = byte_traffic / HOST_BW
+            overhead_s = depth * flushes * self.eager_dispatch_s
 
         # Controller: measured refresh/stall shares of the dataplane
         # time, shrunk by the candidate's REF postponing (longer, rarer

@@ -14,7 +14,10 @@ attached — see ``docs/observability.md``): ``engine.ops_recorded`` /
 ``engine.op.<opcode>`` / ``engine.raw_ops`` for the op mix,
 ``engine.flushes`` + the ``engine.flush_lanes`` histogram for graph
 depth and lane count, ``engine.pipeline_cache.{hit,miss}`` for compile
-amortization, ``engine.autoflush.{ops,memory}`` for threshold pressure.
+amortization, ``engine.autoflush.{ops,memory}`` for threshold pressure,
+``engine.leaf_bytes_staged`` + ``engine.leaf_cache.{hits,misses}`` for
+flush-path data movement (what leaf snapshots actually cost — the term
+that lets the cost model price fused staging against eager streaming).
 Controller counters (``derive_controller_counters`` replays of the
 scheduler audit trail) contribute the bus-utilization / stall-split /
 row-conflict / refresh features when present; they default to zero when
@@ -60,6 +63,8 @@ class WorkloadProfile:
     cache_hit_rate: float = 0.0     # pipeline-cache hits / flushes
     autoflush_ops_fraction: float = 0.0     # flushes forced by op count
     autoflush_memory_fraction: float = 0.0  # flushes forced by memory est
+    leaf_bytes_per_flush: float = 0.0  # staged leaf-snapshot bytes / flush
+    leaf_cache_hit_rate: float = 0.0   # leaf-cache hits / lookups
     bus_utilization: float = 0.0    # cmd-bus busy / wall (controller)
     stall_trrd_fraction: float = 0.0   # tRRD stall / wall
     stall_tfaw_fraction: float = 0.0   # tFAW stall / wall
@@ -98,6 +103,8 @@ class WorkloadProfile:
                  if lanes_h and lanes_h["count"] else 0.0)
         hits = c.get("engine.pipeline_cache.hit", 0)
         misses = c.get("engine.pipeline_cache.miss", 0)
+        lhits = c.get("engine.leaf_cache.hits", 0)
+        lmisses = c.get("engine.leaf_cache.misses", 0)
         wall = c.get("wall_ns", 0.0)
         cols = (c.get("row.hit", 0) + c.get("row.miss", 0)
                 + c.get("row.conflict", 0))
@@ -114,6 +121,10 @@ class WorkloadProfile:
                                     / flushes if flushes else 0.0),
             autoflush_memory_fraction=(c.get("engine.autoflush.memory", 0)
                                        / flushes if flushes else 0.0),
+            leaf_bytes_per_flush=(c.get("engine.leaf_bytes_staged", 0)
+                                  / flushes if flushes else 0.0),
+            leaf_cache_hit_rate=(lhits / (lhits + lmisses)
+                                 if lhits + lmisses else 0.0),
             bus_utilization=c.get("cmd_bus_utilization", 0.0),
             stall_trrd_fraction=(c.get("stall.trrd_ns", 0.0) / wall
                                  if wall else 0.0),
@@ -164,6 +175,8 @@ class WorkloadProfile:
             "cache_hit_rate": self.cache_hit_rate,
             "autoflush_ops_fraction": self.autoflush_ops_fraction,
             "autoflush_memory_fraction": self.autoflush_memory_fraction,
+            "leaf_bytes_per_flush": self.leaf_bytes_per_flush,
+            "leaf_cache_hit_rate": self.leaf_cache_hit_rate,
             "bus_utilization": self.bus_utilization,
             "stall_trrd_fraction": self.stall_trrd_fraction,
             "stall_tfaw_fraction": self.stall_tfaw_fraction,

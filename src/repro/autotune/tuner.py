@@ -17,7 +17,10 @@ cost-plane invariant:
 
 * **execution knobs** — ``fused_backend``, plane layout,
   ``flush_threshold`` / ``flush_memory_bytes``, crossbar
-  ``cmd_buffer_lookahead`` — change only *where/when* programs run.
+  ``cmd_buffer_lookahead``, and ``fuse`` itself (the cost model prices
+  eager per-op dispatch against fused staging + leaf-upload traffic, so
+  a window dominated by snapshot bytes can recommend ``fuse=False``) —
+  change only *where/when* programs run.
   ``TunedPlan.apply`` (and ``Device.autotune``) applies these by
   default: outputs and ``EngineStats`` are bit-identical to the static
   config.
@@ -45,7 +48,7 @@ PLAN_SCHEMA = "repro.autotune/1"
 
 _KNOB_FIELDS = ("fused_backend", "word_bits", "flush_threshold",
                 "flush_memory_bytes", "ref_postponing",
-                "cmd_buffer_lookahead")
+                "cmd_buffer_lookahead", "fuse")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +66,7 @@ class SearchSpace:
     flush_memory_bytes: tuple = (1 << 30,)
     ref_postponing: tuple = (1, 2, 4, 8)
     cmd_buffer_lookahead: tuple = (2, 8, 32)
+    fuse: tuple = (True, False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +79,7 @@ class _Knobs:
     flush_memory_bytes: int | None
     ref_postponing: int
     cmd_buffer_lookahead: int
+    fuse: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,6 +99,7 @@ class TunedPlan:
     flush_memory_bytes: int | None = 1 << 30
     ref_postponing: int = 1
     cmd_buffer_lookahead: int = 8
+    fuse: bool = True
     score_s: float = 0.0
     baseline_score_s: float = 0.0
     estimate: dict = dataclasses.field(default_factory=dict)
@@ -117,7 +123,11 @@ class TunedPlan:
 
     def apply(self, config, *, cost_plane: bool = False):
         """``config`` with this plan's execution knobs applied (an
-        ``EngineConfig``-shaped object with ``.replace``). Execution
+        ``EngineConfig``-shaped object with ``.replace``), including the
+        ``fuse`` recommendation — fused and eager are bit-exact and
+        stats-identical by construction, so the flip is still an
+        execution knob (live devices pin their current ``fuse``; see
+        ``Device._apply_plan``). Execution
         knobs never change outputs or ``EngineStats``; with
         ``cost_plane=True`` the REF-postponing recommendation is applied
         too (forcing ``controller="auto"`` when none is configured) —
@@ -126,7 +136,8 @@ class TunedPlan:
                        layout=self.word_bits,
                        flush_threshold=self.flush_threshold,
                        flush_memory_bytes=self.flush_memory_bytes,
-                       cmd_buffer_lookahead=self.cmd_buffer_lookahead)
+                       cmd_buffer_lookahead=self.cmd_buffer_lookahead,
+                       fuse=self.fuse)
         if cost_plane and self.ref_postponing != config.ref_postponing:
             changes["ref_postponing"] = self.ref_postponing
             if config.controller is None:
@@ -206,7 +217,8 @@ def _config_knobs(config) -> dict:
                 flush_threshold=config.flush_threshold,
                 flush_memory_bytes=config.flush_memory_bytes,
                 ref_postponing=config.ref_postponing,
-                cmd_buffer_lookahead=config.cmd_buffer_lookahead)
+                cmd_buffer_lookahead=config.cmd_buffer_lookahead,
+                fuse=config.fuse)
 
 
 class Tuner:
@@ -254,26 +266,31 @@ class Tuner:
         layouts = order(sp.layouts, "word_bits")
         backends = order(self._backend_names(), "fused_backend",
                          sort=lambda v: v)
+        # Eager (fuse=False) candidates keep a valid backend/layout pair:
+        # the plan stays fully applicable if the caller re-enables fusion.
+        fuses = order(sp.fuse, "fuse", sort=lambda v: not v)
         out: list[_Knobs] = []
-        for wb in layouts:
-            if wb < config.width:
-                continue
-            for name in backends:
-                spec = get_backend(name)
-                if "fused" not in spec.capabilities \
-                        or spec.max_width < config.width \
-                        or wb not in spec.layouts:
+        for fu in fuses:
+            for wb in layouts:
+                if wb < config.width:
                     continue
-                for t in thresholds:
-                    for m in mem:
-                        for r in refs:
-                            for la in lookaheads:
-                                out.append(_Knobs(
-                                    fused_backend=name, word_bits=wb,
-                                    flush_threshold=t,
-                                    flush_memory_bytes=m,
-                                    ref_postponing=r,
-                                    cmd_buffer_lookahead=la))
+                for name in backends:
+                    spec = get_backend(name)
+                    if "fused" not in spec.capabilities \
+                            or spec.max_width < config.width \
+                            or wb not in spec.layouts:
+                        continue
+                    for t in thresholds:
+                        for m in mem:
+                            for r in refs:
+                                for la in lookaheads:
+                                    out.append(_Knobs(
+                                        fused_backend=name, word_bits=wb,
+                                        flush_threshold=t,
+                                        flush_memory_bytes=m,
+                                        ref_postponing=r,
+                                        cmd_buffer_lookahead=la,
+                                        fuse=fu))
         return out
 
     # -- search --------------------------------------------------------- #
@@ -320,7 +337,7 @@ class DriftDetector:
     ``threshold`` (default 0.5: a feature moved half its scale).
     """
 
-    _RELATIVE = ("lanes", "ops_per_flush")
+    _RELATIVE = ("lanes", "ops_per_flush", "leaf_bytes_per_flush")
 
     def __init__(self, baseline: WorkloadProfile,
                  threshold: float = 0.5):

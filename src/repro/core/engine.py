@@ -67,6 +67,7 @@ multi-device ``"shard-words"`` pipeline).
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import threading
@@ -279,6 +280,165 @@ def _DEAD_REF():  # weakref stand-in for ops that must never be outputs
     return None
 
 
+def _stage_wire(flat, pad: int, layout: PlaneLayout,
+                copy: bool = False) -> np.ndarray:
+    """Flat lane array -> padded int32 wire array with AT MOST one host
+    copy: the pad tail and the lane-dtype conversion fuse into a single
+    allocation (NumPy converts during the assignment), and an in-dtype
+    unpadded input stages as a pure view unless ``copy`` forces private
+    memory (required when ``flat`` still aliases a caller buffer)."""
+    if pad:
+        out = np.zeros(flat.size + pad, layout.np_dtype)
+        out[:flat.size] = flat
+        return layout.to_wire(out)
+    if flat.dtype != layout.np_dtype:
+        return layout.to_wire(flat.astype(layout.np_dtype))
+    if copy:
+        flat = flat.copy()
+    return layout.to_wire(flat)
+
+
+class _LeafCacheEntry:
+    """One cached leaf upload: the private padded host wire plus (lazily)
+    its committed device buffer. ``fp`` is the 257-sample content
+    fingerprint taken when the source buffer was registered — a lookup
+    only hits while the caller's memory still matches it."""
+
+    __slots__ = ("key", "fp", "wire", "dev", "nbytes")
+
+    def __init__(self, key, fp, wire):
+        self.key = key
+        self.fp = fp
+        self.wire = wire        # private padded int32 host wire
+        self.dev = None         # committed jax buffer (lazy, non-donating)
+        self.nbytes = wire.nbytes
+
+
+class _LeafCache:
+    """Fingerprint-keyed cache of staged leaf uploads (the device-resident
+    leaf cache). Keyed on the *caller buffer* — (data pointer, byte size,
+    layout, raw mode) — and guarded by the same sampled content
+    fingerprint as the graph's leaf dedup, so repeated flushes over the
+    same operands (ServeEngine stop predicates, pum_database scans, the
+    BMI/k-clique AND-chains) stage zero bytes and re-upload nothing: the
+    entry's host wire is private (inserted from a record-time snapshot)
+    and its device buffer commits once and survives across flushes and
+    ``CapturedProgram`` replays.
+
+    LRU-bounded by ``capacity`` bytes of host wire (the device mirror is
+    counted implicitly — it exists only for entries hot enough to hit a
+    jitted pipeline). Thread-safe behind its own lock: record-side
+    lookups run under the engine lock, but staging/dispatch
+    (``_prepare_graph``/``_run_staged``) runs outside it.
+
+    Donation policy: a donating flush never passes a cached buffer to the
+    trace — it serves the private host wire (jax device-puts and donates
+    a *fresh* buffer) and drops the entry's device residency, so donated
+    buffers are evicted and cached ones are never donated."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._lock = threading.Lock()
+        self._entries: collections.OrderedDict = collections.OrderedDict()
+        self._bytes = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def lookup(self, key, fp) -> "_LeafCacheEntry | None":
+        with self._lock:
+            e = self._entries.get(key)
+            if e is not None and np.array_equal(e.fp, fp):
+                self._entries.move_to_end(key)
+                return e
+            return None
+
+    def insert(self, key, fp, wire) -> tuple["_LeafCacheEntry | None", int]:
+        """Cache ``wire`` (a private buffer) under ``key``; returns
+        ``(entry, n_evicted)``. Oversized singletons are not cached."""
+        if wire.nbytes > self.capacity:
+            return None, 0
+        entry = _LeafCacheEntry(key, fp, wire)
+        evicted = 0
+        with self._lock:
+            old = self._entries.pop(key, None)
+            if old is not None:
+                self._bytes -= old.nbytes
+            self._entries[key] = entry
+            self._bytes += entry.nbytes
+            while self._bytes > self.capacity and len(self._entries) > 1:
+                _, dead = self._entries.popitem(last=False)
+                self._bytes -= dead.nbytes
+                evicted += 1
+        return entry, evicted
+
+    def device_buffer(self, entry: "_LeafCacheEntry"):
+        """The entry's committed device buffer (uploads once, lazily)."""
+        dev = entry.dev
+        if dev is None:
+            import jax.numpy as jnp
+            dev = jnp.asarray(entry.wire)
+            with self._lock:
+                if entry.dev is None:
+                    entry.dev = dev
+                else:       # another flush won the commit race
+                    dev = entry.dev
+        return dev
+
+    def drop_device(self, entry: "_LeafCacheEntry") -> None:
+        """Release device residency (donating flushes: the trace consumes
+        a fresh buffer, so any committed mirror is stale weight)."""
+        with self._lock:
+            entry.dev = None
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self._bytes = 0
+
+
+class _Leaf:
+    """One registered operand of an op graph.
+
+    Exactly one staging source is set:
+
+    * ``entry`` — a leaf-cache entry whose fingerprint matched at record
+      time: flush stages the cached wire (or its committed device
+      buffer) and the record-time ``.copy()`` is elided entirely;
+    * ``wire`` — the record-time snapshot, already in padded wire form
+      (one fused pad+convert copy when the operand aliased caller
+      memory; a zero-copy view when ``ravel()`` already privatized it).
+    """
+
+    __slots__ = ("wire", "entry", "nbytes")
+
+    def __init__(self, wire=None, entry=None, nbytes=0):
+        self.wire = wire
+        self.entry = entry
+        self.nbytes = nbytes
+
+
+# The 257-point fingerprint sample grid per lane count: every graph at a
+# given lane count shares one read-only index array — rebuilding it per
+# flush (np.linspace + astype) is measurable against small programs.
+_FP_IDX_CACHE: dict[int, np.ndarray] = {}
+
+
+def _fp_indices(n: int) -> np.ndarray:
+    idx = _FP_IDX_CACHE.get(n)
+    if idx is None:
+        if len(_FP_IDX_CACHE) >= 1024:  # unbounded lane-count churn guard
+            _FP_IDX_CACHE.clear()
+        idx = np.linspace(0, n - 1, min(n, 257)).astype(np.int64)
+        idx.setflags(write=False)
+        _FP_IDX_CACHE[n] = idx
+    return idx
+
+
 class _OpGraph:
     """Recording buffer for one fused program: leaf operand arrays plus the
     op list, with weakrefs to the handed-out LazyArrays (ops whose handle
@@ -292,16 +452,20 @@ class _OpGraph:
     flushes at mode boundaries."""
 
     def __init__(self, n: int, width: int, layout: PlaneLayout,
-                 raw: bool = False):
+                 raw: bool = False, cache: "_LeafCache | None" = None):
         self.n = n                      # dataplane lane count (all values)
         self.width = width
         self.layout = layout
         self.raw = raw
-        self.leaves: list[np.ndarray] = []
+        self.cache = cache              # engine's leaf cache (may be None)
+        self.leaves: list[_Leaf] = []
         self._leaf_ids: dict[int, int] = {}
         self._pins: list[np.ndarray] = []  # keep id() keys alive (below)
         self._fps: list[np.ndarray] = []   # content fingerprints (below)
-        self._fp_idx = np.linspace(0, n - 1, min(n, 257)).astype(np.int64)
+        self._fp_idx = _fp_indices(n)
+        self._pad = (-n) % 32  # every pipeline tiles lanes in groups of 32
+        self.elided_bytes = 0  # snapshot copies skipped (cache hit / view)
+        self.cache_evictions = 0
         self.ops: list[tuple[str, tuple, int]] = []  # (opcode, args, param)
         self.results: list = []         # weakref per op
         # perf_counter_ns at first recorded op — set only when a tracer is
@@ -315,20 +479,34 @@ class _OpGraph:
         self.done: threading.Event | None = None
 
     def leaf_id(self, arr: np.ndarray) -> tuple[str, int]:
-        """Register an operand, snapshotting its content (mod the layout
-        word — the pipeline keeps planes[:width]): the graph must not
-        alias caller buffers, or mutations between record and flush would
-        silently diverge from eager results. Re-feeding the same array
-        object dedups to one pipeline input, guarded by a sampled content
-        fingerprint so an in-place mutation between two recorded uses
-        registers a fresh leaf instead of reusing the stale snapshot.
-        (The guard samples 257 positions; a mutation confined to
-        unsampled elements can still alias — call flush() before mutating
-        operands in place.)"""
+        """Register an operand under the copy-on-write snapshot contract
+        (mod the layout word — the pipeline keeps planes[:width]): the
+        graph must not alias caller buffers, or mutations between record
+        and flush would silently diverge from eager results. Re-feeding
+        the same array object dedups to one pipeline input, guarded by a
+        sampled content fingerprint so an in-place mutation between two
+        recorded uses registers a fresh leaf instead of reusing the stale
+        snapshot. (The guard samples 257 positions; a mutation confined
+        to unsampled elements can still alias — call flush() before
+        mutating operands in place.)
+
+        The record-time ``.copy()`` is taken only when it is needed:
+
+        * the engine's leaf cache holds an entry for this buffer whose
+          fingerprint still matches -> stage straight from the cache,
+          copy nothing;
+        * ``ravel()`` already privatized the memory (non-contiguous
+          operand, e.g. a broadcast scalar) -> the private flat array IS
+          the snapshot;
+        * otherwise the operand aliases caller memory -> snapshot now
+          (directly into padded wire form, one fused copy) and seed the
+          cache so the NEXT flush over this buffer stages zero bytes.
+        """
         key = id(arr)
-        flat = arr.ravel()
+        rav = arr.ravel()
+        flat = rav
         if self.raw:  # reinterpret uint64 words as layout lanes
-            flat = self.layout.raw_lanes(flat)
+            flat = self.layout.raw_lanes(rav)
         idx = self._leaf_ids.get(key)
         if idx is not None and np.array_equal(flat[self._fp_idx],
                                               self._fps[idx]):
@@ -347,12 +525,39 @@ class _OpGraph:
                 f"inputs to the engine width or use fuse=False")
         i = len(self.leaves)
         self._leaf_ids[key] = i  # latest content owns the dedup slot
-        self.leaves.append(flat.astype(self.layout.np_dtype))
-        self._fps.append(flat[self._fp_idx])
+        fp = flat[self._fp_idx]  # fancy indexing: always a private copy
+        nbytes = flat.size * self.layout.nbytes_per_word
+        # ``ravel()`` returns a view (base set) iff the flat memory still
+        # belongs to the caller; a fresh copy (base None) is private.
+        shared = rav.base is not None or rav is arr
+        ckey = entry = None
+        if shared and self.cache is not None and flat.size:
+            ckey = (flat.__array_interface__["data"][0], flat.nbytes,
+                    self.layout.name, self.raw)
+            entry = self.cache.lookup(ckey, fp)
+        if entry is not None:
+            self.elided_bytes += nbytes          # record-time cache hit
+            self.leaves.append(_Leaf(entry=entry, nbytes=nbytes))
+        else:
+            wire = _stage_wire(flat, self._pad, self.layout, copy=shared)
+            if wire.base is not None and not shared:
+                self.elided_bytes += nbytes      # staged as a pure view
+            if ckey is not None:                 # seed for the next flush
+                entry, ev = self.cache.insert(ckey, fp, wire)
+                self.cache_evictions += ev
+            self.leaves.append(_Leaf(wire=wire, entry=None, nbytes=nbytes))
+        self._fps.append(fp)
         # Pin the original: the id() dedup key is only valid while the
         # caller's array stays alive.
         self._pins.append(arr)
         return ("leaf", i)
+
+    def stage_leaf(self, li: int) -> np.ndarray:
+        """The padded int32 host wire for leaf ``li`` (zero-copy: either
+        the record-time snapshot or the cached upload's host wire)."""
+        leaf = self.leaves[li]
+        e = leaf.entry
+        return leaf.wire if e is None else e.wire
 
     def add_op(self, opcode: str, args: tuple, param: int,
                out: "LazyArray", internal: bool = False) -> int:
@@ -415,7 +620,8 @@ class PulsarEngine:
                  donate_leaves: bool = False, layout=None,
                  fused_backend: str | None = None,
                  ref_postponing: int = 1, reliability=None,
-                 cmd_buffer_lookahead: int = 8):
+                 cmd_buffer_lookahead: int = 8,
+                 leaf_cache_bytes: int | None = 1 << 26):
         self.profile = PROFILES[mfr]
         self.mfr = mfr
         self.width = width
@@ -533,11 +739,21 @@ class PulsarEngine:
                 ) from None
         if flush_threshold is not None and flush_threshold < 1:
             raise ValueError("flush_threshold must be >= 1 or None")
+        if leaf_cache_bytes is not None and leaf_cache_bytes < 0:
+            raise ValueError(
+                f"leaf_cache_bytes must be >= 0 or None (0/None disables "
+                f"the leaf cache), got {leaf_cache_bytes}")
         self.fuse = fuse
         self.fused_backend = fused_backend
         self.flush_threshold = flush_threshold
         self.flush_memory_bytes = flush_memory_bytes
         self.donate_leaves = donate_leaves
+        # Device-resident leaf cache: staged leaf uploads keyed on the
+        # caller's buffer + content fingerprint, shared across all client
+        # contexts of this engine (one cache per device). 0/None disables.
+        self.leaf_cache_bytes = leaf_cache_bytes or 0
+        self._leaf_cache = (_LeafCache(leaf_cache_bytes)
+                            if leaf_cache_bytes else None)
         # Telemetry: counters always exist (cheap dict, written only while
         # a tracer is attached); ``tracer`` is None until someone opts in
         # (pum.profile(), ServeEngine(telemetry=True)) — the disabled path
@@ -879,16 +1095,26 @@ class PulsarEngine:
         # Cross-context materialization (a pending lazy of ANOTHER graph
         # entering as a leaf) may dispatch a flush, so resolve operands
         # before taking the lock for this context's graph mutation.
+        # A pending raw popcount also materializes before further use:
+        # its lanes are per-lane partial counts that only become the
+        # caller-visible word count at the materialize fold, so in-graph
+        # consumers would see the packed halves instead of the sum.
+        def _needs_fold(x):
+            return (x._graph.raw
+                    and x._graph.layout.raw_lanes_per_word == 2
+                    and x._graph.ops[x._op_idx][0] == "popcount")
+
         resolved = [x.materialize() if isinstance(x, LazyArray)
-                    and not (x._value is None and x._graph is not None
-                             and x._graph is self._graph)
+                    and (not (x._value is None and x._graph is not None
+                              and x._graph is self._graph)
+                         or _needs_fold(x))
                     else x for x in operands]
         with self._lock:
             g = self._graph
             if g is None:
                 g = self._graph = _OpGraph(
                     n, self.layout.word_bits if raw else self.width,
-                    self.layout, raw=raw)
+                    self.layout, raw=raw, cache=self._leaf_cache)
                 if self.tracer is not None:
                     g.t_start = time.perf_counter_ns()
             if self.tracer is not None:
@@ -966,6 +1192,12 @@ class PulsarEngine:
             g = self._take_next(None)
             if g is None:
                 with self._lock:
+                    # An entry whose future resolved is stale (its
+                    # registration raced the worker's pop) — drop it
+                    # instead of spinning on it.
+                    for k, f in list(self._inflight.items()):
+                        if f.done():
+                            del self._inflight[k]
                     if not self._inflight:
                         return
                 continue
@@ -1012,6 +1244,13 @@ class PulsarEngine:
         with self._lock:
             for g, _ in staged:
                 self._inflight[id(g)] = fut
+        if fut.done():
+            # The worker can drain _async_run before the entries above
+            # land (its per-graph pops find nothing) — drop them here so
+            # flush_all never waits on an already-finished dispatch.
+            with self._lock:
+                for g, _ in staged:
+                    self._inflight.pop(id(g), None)
         if self.tracer is not None:
             self.counters.inc("engine.flush_async")
         return FlushHandle(fut)
@@ -1169,14 +1408,37 @@ class PulsarEngine:
                 layout=g.layout)
             program, out_pos, leaf_map = optimize_program(program)
             sp_opt.args["n_ops_out"] = len(program.ops)
-        with tr.span("flush.leaf_upload", n_leaves=len(leaf_map)):
-            pad = (-g.n) % 32  # every pipeline tiles lanes in groups of 32
+        with tr.span("flush.leaf_upload", n_leaves=len(leaf_map)) as sp_up:
+            # Leaves are already padded wire (or leaf-cache entries) —
+            # staging moves no bytes; cache entries resolve to committed
+            # device buffers at dispatch (_run_staged).
+            staged_b = skipped_b = hits = 0
             leaves = []
-            for li in leaf_map:  # layout-dtype snapshots (leaf_id)
-                flat = g.leaves[li]
-                if pad:
-                    flat = np.pad(flat, (0, pad))
-                leaves.append(g.layout.to_wire(flat))
+            for li in leaf_map:
+                leaf = g.leaves[li]
+                if leaf.entry is not None:
+                    hits += 1
+                    skipped_b += leaf.entry.nbytes
+                    leaves.append(leaf.entry)
+                else:
+                    staged_b += leaf.wire.nbytes
+                    leaves.append(leaf.wire)
+            if self.tracer is not None:
+                sp_up.args["bytes_staged"] = staged_b
+                sp_up.args["bytes_skipped"] = skipped_b
+                c = self.counters
+                if hits:
+                    c.inc("engine.leaf_cache.hits", hits)
+                if len(leaf_map) - hits:
+                    c.inc("engine.leaf_cache.misses", len(leaf_map) - hits)
+                if g.cache_evictions:
+                    c.inc("engine.leaf_cache.evictions", g.cache_evictions)
+                    g.cache_evictions = 0
+                if g.elided_bytes:
+                    c.inc("engine.snapshot_bytes_elided", g.elided_bytes)
+                    g.elided_bytes = 0
+                if staged_b:
+                    c.inc("engine.leaf_bytes_staged", staged_b)
         return (program, out_pos, live, out_idx, leaves)
 
     def _run_staged(self, g: _OpGraph, staged) -> None:
@@ -1194,6 +1456,7 @@ class PulsarEngine:
                 self.counters.inc("engine.pipeline_cache.hit" if hit
                                   else "engine.pipeline_cache.miss")
                 sp_c.args["cache"] = "hit" if hit else "miss"
+        leaves = self._resolve_cached_leaves(g, pipeline, leaves)
         rel = self.reliability
         with tr.span("flush.dispatch", n_ops=len(program.ops),
                      n_lanes=g.n) as sp_d:
@@ -1214,6 +1477,13 @@ class PulsarEngine:
                 lanes = g.layout.from_wire(outs[pos])[:g.n]
                 if g.raw:  # re-join the lanes of each caller uint64 word
                     val = g.layout.join_raw(lanes)
+                    if g.ops[i][0] == "popcount" \
+                            and g.layout.raw_lanes_per_word == 2:
+                        # A raw popcount's lanes hold per-lane partial
+                        # counts: the word's count is their SUM (the
+                        # adder tree's final fold), not a bit-join.
+                        val = ((val >> np.uint64(32))
+                               + (val & np.uint64(0xFFFFFFFF)))
                 else:
                     val = lanes.astype(np.uint64)
                 lz._value = val.reshape(lz.shape)
@@ -1231,6 +1501,38 @@ class PulsarEngine:
             # windows / takes counter deltas here (reentrancy-guarded on
             # its side — a re-tune's own flushes never recurse).
             self.autotuner.on_flush(self)
+
+    def _resolve_cached_leaves(self, g: _OpGraph, pipeline, leaves) -> list:
+        """Resolve staged leaf-cache entries against the compiled pipeline:
+
+        * non-donating jitted pipelines (``pipeline.wants_device`` says
+          the program is big enough to leave the NumPy short-circuit)
+          get the entry's committed device buffer — repeat flushes
+          re-upload nothing;
+        * everything else gets the entry's private host wire; a donating
+          flush additionally drops the entry's device residency (the
+          trace device-puts and donates a FRESH buffer — cached buffers
+          are never donated, donated ones are never cached).
+        """
+        if not any(isinstance(x, _LeafCacheEntry) for x in leaves):
+            return leaves
+        cache = self._leaf_cache
+        wants = getattr(pipeline, "wants_device", None)
+        wire_words = (g.n + g._pad) * g.layout.wire_words_per_lane
+        use_dev = (not self.donate_leaves and wants is not None
+                   and wants(wire_words))
+        out = []
+        for x in leaves:
+            if isinstance(x, _LeafCacheEntry):
+                if use_dev:
+                    out.append(cache.device_buffer(x))
+                else:
+                    if self.donate_leaves:
+                        cache.drop_device(x)
+                    out.append(x.wire)
+            else:
+                out.append(x)
+        return out
 
     _PLANEWISE = frozenset({"and", "or", "xor"})
 
@@ -1333,6 +1635,12 @@ class PulsarEngine:
         w = width or self.width
         self._charge("popcount", a.size, n_planes=w)
         if self._can_fuse(a):
+            # Raw packed-bitmap graphs keep popcount planewise on the
+            # 64-bit words (the evaluators' adder tree counts the whole
+            # word), joining the pending raw program instead of forcing
+            # a mode-boundary flush that would materialize the operand.
+            if self._use_raw((a,)):
+                return self._record("popcount", (a,), raw=True)
             return self._record("popcount", (a,))
         return _vec_popcount(self._force(a))
 

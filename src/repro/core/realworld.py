@@ -44,10 +44,12 @@ def _timed(fn):
     return out, (time.perf_counter() - t0) * 1e3
 
 
-def bmi_active_users(dev: Device, daily_bitmaps: np.ndarray
-                     ) -> tuple[int, float, float]:
+def bmi_active_users(dev: Device, daily_bitmaps: np.ndarray,
+                     verify: bool = True) -> tuple[int, float, float]:
     """daily_bitmaps: [days, n_users/64] packed uint64. Query: how many users
-    were active every day (Fig 20's BMI query)."""
+    were active every day (Fig 20's BMI query). With ``verify=False`` the
+    NumPy oracle and the assertion are skipped and cpu_ms reads 0.0 —
+    benchmark harnesses verify once, then time the device path alone."""
     dev = as_device(dev)
     days = daily_bitmaps.shape[0]
 
@@ -57,16 +59,18 @@ def bmi_active_users(dev: Device, daily_bitmaps: np.ndarray
             acc = acc & daily_bitmaps[d]
         return int(_vec_popcount(acc).sum())
 
-    want, cpu_ms = _timed(cpu)
+    want, cpu_ms = _timed(cpu) if verify else (None, 0.0)
     dev.reset_stats()
     acc = dev.asarray(daily_bitmaps[0])
     for d in range(1, days):
         acc = acc & daily_bitmaps[d]
-    # Popcount over the 64-bit words' planes (bit-serial adder tree); the
-    # reduction itself reads back on the host, so only the charge is PuM.
-    dev.charge("popcount", acc.size, n_planes=64)
-    got = int(_vec_popcount(acc.to_numpy()).sum())
-    assert got == want
+    # Popcount over the 64-bit words' planes (bit-serial adder tree) runs
+    # on-device — on a fused device it joins the AND chain in the single
+    # compiled pass — and charges the same cost-plane row either way; the
+    # host only sums the per-word counts.
+    got = int(acc.popcount(width=64).to_numpy().sum())
+    if verify:
+        assert got == want
     return got, dev.latency_ms, cpu_ms
 
 
@@ -132,16 +136,60 @@ def triangle_count(dev: Device, adj_bits: np.ndarray
     return got, dev.latency_ms, cpu_ms
 
 
-def kclique_star(dev: Device, adj_bits: np.ndarray,
-                 cliques: list[tuple[int, ...]]) -> tuple[int, float, float]:
-    """Count vertices adjacent to every member of each k-clique (the star
-    extension step of KCS [10]): AND-reduce clique members' adjacency rows."""
-    dev = as_device(dev)
+_KCS_MEMO: dict = {}
+
+
+def _kcs_operands(adj_bits: np.ndarray, cliques: list[tuple[int, ...]]):
+    """Packed adjacency rows plus, for uniform-k clique lists, one stacked
+    operand per clique position (the j-th members' rows concatenated across
+    all cliques). Memoized per (adjacency, clique list): repeat calls return
+    the *same* arrays, so the engine's pointer+fingerprint leaf cache serves
+    the already-uploaded device buffers with zero bytes staged. The memo
+    holds strong references to its keys (ids stay valid) and samples the
+    adjacency contents like the engine's leaf fingerprint, so an in-place
+    rewrite of the adjacency invalidates the entry; mutating the clique
+    *list* in place between calls is outside the contract."""
+    key = (adj_bits.__array_interface__["data"][0], adj_bits.shape,
+           id(cliques))
+    hit = _KCS_MEMO.get(key)
+    if (hit is not None and hit[0] is adj_bits and hit[1] is cliques
+            and np.array_equal(adj_bits.ravel()[hit[2]], hit[3])):
+        return hit[4], hit[5]
     n = adj_bits.shape[0]
     packed = np.packbits(adj_bits, axis=1, bitorder="little")
     pad = np.zeros((n, (packed.shape[1] + 7) // 8 * 8), np.uint8)
     pad[:, :packed.shape[1]] = packed
     rows = pad.view(np.uint64)
+    k = len(cliques[0]) if cliques else 0
+    stacks = None
+    if k and all(len(cl) == k for cl in cliques):
+        idx = np.asarray(cliques, dtype=np.intp)
+        stacks = tuple(rows[idx[:, j]].reshape(-1) for j in range(k))
+    flat = adj_bits.ravel()
+    fp_idx = np.linspace(0, flat.size - 1,
+                         min(flat.size, 257)).astype(np.int64)
+    if len(_KCS_MEMO) >= 4:
+        _KCS_MEMO.clear()
+    _KCS_MEMO[key] = (adj_bits, cliques, fp_idx, flat[fp_idx].copy(),
+                      rows, stacks)
+    return rows, stacks
+
+
+def kclique_star(dev: Device, adj_bits: np.ndarray,
+                 cliques: list[tuple[int, ...]],
+                 verify: bool = True) -> tuple[int, float, float]:
+    """Count vertices adjacent to every member of each k-clique (the star
+    extension step of KCS [10]): AND-reduce clique members' adjacency rows.
+
+    Uniform-k clique lists run PULSAR-style as one bulk program: the j-th
+    members' rows are stacked into a single operand per clique position and
+    the k-1 ANDs execute over all cliques at once (a single flush on a
+    fused device); the stacks are memoized (see :func:`_kcs_operands`) so
+    repeat calls are pointer-stable and hit the leaf cache. Ragged clique
+    lists fall back to the per-clique loop. With ``verify=False`` the NumPy
+    oracle and assertion are skipped and cpu_ms reads 0.0."""
+    dev = as_device(dev)
+    rows, stacks = _kcs_operands(adj_bits, cliques)
 
     def cpu():
         tot = 0
@@ -152,17 +200,23 @@ def kclique_star(dev: Device, adj_bits: np.ndarray,
             tot += int(_vec_popcount(acc).sum())
         return tot
 
-    want, cpu_ms = _timed(cpu)
+    want, cpu_ms = _timed(cpu) if verify else (None, 0.0)
     dev.reset_stats()
-    tot = 0
-    for cl in cliques:
-        acc = dev.asarray(rows[cl[0]])
-        for v in cl[1:]:
-            acc = acc & rows[v]
-        dev.charge("popcount", acc.size, n_planes=64)
-        tot += int(_vec_popcount(acc.to_numpy()).sum())
-    got = tot
-    assert got == want
+    if stacks is not None:
+        acc = dev.asarray(stacks[0])
+        for s in stacks[1:]:
+            acc = acc & s
+        got = int(acc.popcount(width=64).to_numpy().sum())
+    else:
+        tot = 0
+        for cl in cliques:
+            acc = dev.asarray(rows[cl[0]])
+            for v in cl[1:]:
+                acc = acc & rows[v]
+            tot += int(acc.popcount(width=64).to_numpy().sum())
+        got = tot
+    if verify:
+        assert got == want
     return got, dev.latency_ms, cpu_ms
 
 

@@ -20,7 +20,7 @@ other (tests/kernels):
     VMEM-resident block, so N ops cost one HBM round-trip instead of N.
   * ``run_program_ref`` — the vertical jnp oracle (semantics anchor,
     validates the Pallas kernel in interpret mode).
-  * ``run_program_words`` — horizontal word-domain jnp evaluator: the CPU
+  * ``run_program_words`` — horizontal word-domain evaluator: the CPU
     execution path. On a scalar ISA the vertical form loses ~10x (a ripple
     add is 32 dependent plane passes vs one hardware add), and the two
     bit_transpose32 calls bracketing the program cancel algebraically —
@@ -28,6 +28,18 @@ other (tests/kernels):
     the whole graph in the word domain (same elimination of per-op
     dispatch/materialization, minus the transposes). This is the same
     CPU-vs-TPU dispatch split ops.py applies to every kernel.
+  * ``run_program_pairs`` — the jitted 64-bit lane path: a 64-bit lane
+    evaluates as a (lo, hi) pair of uint32 words (the wire layout's two
+    int32 words, bitcast), with the carry chained across the pair in
+    every arithmetic op — 64-bit add/sub/mul/divmod never materialize a
+    uint64 dtype, so the wide path runs under ``jax.jit`` without the
+    global x64 flag. divmod is Knuth Algorithm D over base-2^16 digits
+    (one hardware uint32 division per quotient digit).
+
+Word-domain pipelines short-circuit per call to the NumPy evaluator when
+the program is tiny (``_NP_CUTOFF_WIRE_OPS`` wire-words x ops): for a
+2-op bitmap AND over a handful of lanes, one XLA dispatch costs more
+than the whole program.
 
 Programs are frozen/hashable, so compiled pipelines are cached on graph
 *structure*: re-recording the same op sequence over new batches reuses the
@@ -161,6 +173,15 @@ def optimize_program(program: FusedProgram
     >>> out_pos, leaf_map
     ((0,), (0, 1))
     """
+    return _optimize_cached(program)
+
+
+@functools.lru_cache(maxsize=512)
+def _optimize_cached(program: FusedProgram):
+    # Memoized body of optimize_program: programs are frozen/hashable
+    # (they already key the pipeline cache) and the result is immutable,
+    # so repeat flushes of the same recorded structure skip the whole
+    # normalization pass.
     n_in = program.n_inputs
     canon: dict[int, int] = {}     # original op id -> canonical value id
     table: dict[tuple, int] = {}   # (opcode, args, param) -> value id
@@ -178,6 +199,27 @@ def optimize_program(program: FusedProgram
             table[key] = canon[vid] = vid
             kept.append((vid, FusedOp(op.opcode, args, op.param)))
     out_canon = [canon.get(v, v) for v in program.outputs]
+    # Narrow each divmod consumed by only one kind of selector into the
+    # direct div / mod op: the engine lowers both ``//`` and ``%`` through
+    # the shared tuple op, so a program using just one half would
+    # otherwise pay for both division passes in every evaluator. Running
+    # AFTER unification keeps `a // b; a % b` pairs (CSE merges their two
+    # divmod records, giving the pair both selector kinds) on the single
+    # divider pass; the orphaned pair falls to the liveness prune below.
+    users: dict[int, set] = {}
+    for _, op in kept:
+        for a in op.args:
+            users.setdefault(a, set()).add(op.opcode)
+    out_set = set(out_canon)
+    pair_args = {vid: op.args for vid, op in kept
+                 if op.opcode == "divmod" and vid not in out_set
+                 and users.get(vid) in ({"fst"}, {"snd"})}
+    if pair_args:
+        kept = [(vid, FusedOp("div" if op.opcode == "fst" else "mod",
+                              pair_args[op.args[0]]))
+                if op.opcode in ("fst", "snd") and op.args[0] in pair_args
+                else (vid, op)
+                for vid, op in kept]
     needed = set(out_canon)
     for vid, op in reversed(kept):  # backward liveness from the outputs
         if vid in needed:
@@ -365,8 +407,9 @@ def run_program_words(program: FusedProgram, leaves: list) -> tuple:
     per program output. Operands are masked to ``width`` bits on entry —
     identical value semantics to the vertical evaluators (everything is
     modulo 2**width). Computes with whichever array module the leaves
-    belong to (jnp under jit; NumPy for the 64-bit host path, where jax
-    would need the x64 flag)."""
+    belong to: jnp under jit (the 32-bit pipeline), NumPy for the
+    small-program short-circuit and as the semantics oracle the
+    uint32-pair path (``run_program_pairs``) is tested against."""
     layout = program.layout
     xp = np if isinstance(leaves[0], np.ndarray) else jnp
     # Natural-word programs need no masking at all: every lane op wraps
@@ -374,23 +417,224 @@ def run_program_words(program: FusedProgram, leaves: list) -> tuple:
     mask = (None if program.width == layout.word_bits
             else layout.word_scalar(layout.mask(program.width), xp))
     env = list(leaves) if mask is None else [x & mask for x in leaves]
-    # Dead-value liveness: drop each intermediate after its last use so
-    # the allocator recycles warm buffers instead of holding every
-    # temporary of the whole program live (NumPy path: this is the
-    # difference between cache-resident reuse and a fresh page-faulting
-    # allocation per op; under jit the env holds tracers and XLA does its
-    # own liveness, so it is free there).
-    last_use: dict[int, int] = {v: len(program.ops) for v in program.outputs}
-    for i, op in enumerate(program.ops):
-        for a in op.args:
-            last_use[a] = max(last_use.get(a, -1), i)
-    for i, op in enumerate(program.ops):
+    if xp is np:
+        # Release each value after its last use (outputs excepted) so
+        # the allocator recycles the big intermediate buffers — holding
+        # the whole env alive costs fresh pages per op and roughly
+        # doubles the evaluator's wall time on full-plane programs.
+        # (Under jit env holds tracers; XLA does its own liveness.)
+        last_use = {}
+        for i, op in enumerate(program.ops):
+            for a in op.args:
+                last_use[a] = i
+        keep = set(program.outputs)
+        for i, op in enumerate(program.ops):
+            env.append(_apply_word_op(op, [env[a] for a in op.args],
+                                      program.width, mask, layout, xp))
+            for a in op.args:
+                if last_use[a] == i and a not in keep:
+                    env[a] = None
+        return tuple(env[v] for v in program.outputs)
+    for op in program.ops:
         env.append(_apply_word_op(op, [env[a] for a in op.args],
                                   program.width, mask, layout, xp))
-        for a in op.args:
-            if last_use[a] == i:
-                env[a] = None
     return tuple(env[v] for v in program.outputs)
+
+
+# --------------------------------------------------------------------- #
+# Jitted 64-bit lane path: uint32 (lo, hi) pairs, carry chained in the IR
+# --------------------------------------------------------------------- #
+
+
+def _mulhi32(x, y):
+    """High 32 bits of the 64-bit product of two uint32 arrays, via
+    16-bit limbs (no uint64 dtype anywhere)."""
+    x0, x1 = x & 0xFFFF, x >> 16
+    y0, y1 = y & 0xFFFF, y >> 16
+    lo_lo = x0 * y0
+    mid1 = x1 * y0 + (lo_lo >> 16)
+    mid2 = x0 * y1 + (mid1 & 0xFFFF)
+    return x1 * y1 + (mid1 >> 16) + (mid2 >> 16)
+
+
+def _pair_divmod(a, b):
+    """Unsigned 64-bit divmod on uint32 (lo, hi) pairs — Knuth Algorithm D
+    over base-2^16 digits (Hacker's Delight divmnu): normalize the
+    divisor so its top digit has the high bit set, estimate each quotient
+    digit with ONE hardware uint32 division, correct it at most twice,
+    multiply-subtract in 16-bit digits, add back on the (rare) overdraw.
+    Lanes dividing by zero yield (0, 0), matching unsigned NumPy."""
+    alo, ahi = a
+    blo, bhi = b
+    u32 = jnp.uint32
+    zero = jnp.zeros_like(alo)
+    one = jnp.ones_like(alo)
+    bz = (blo | bhi) == 0
+    vlo = jnp.where(bz, one, blo)
+    vhi = jnp.where(bz, zero, bhi)
+    # Normalization shift: clz of the 64-bit divisor (s in [0, 63]).
+    s = jnp.where(vhi != 0, jax.lax.clz(vhi),
+                  32 + jax.lax.clz(vlo)).astype(u32)
+    sl = s & 31
+    big = s >= 32
+    # Shifts by (32 - sl) are clamped (&31) and gated by sl == 0 selects:
+    # XLA leaves out-of-range shift amounts undefined.
+    up = jnp.where(sl == 0, zero, vlo >> ((32 - sl) & 31))
+    lo_sh = vlo << sl
+    hi_sh = (vhi << sl) | up
+    vn_lo = jnp.where(big, zero, lo_sh)
+    vn_hi = jnp.where(big, lo_sh, hi_sh)
+    vn = (vn_lo & 0xFFFF, vn_lo >> 16, vn_hi & 0xFFFF, vn_hi >> 16)
+    # Dividend << s as a 128-bit value in four 32-bit words w0..w3.
+    a0 = alo << sl
+    a1 = (ahi << sl) | jnp.where(sl == 0, zero, alo >> ((32 - sl) & 31))
+    a2 = jnp.where(sl == 0, zero, ahi >> ((32 - sl) & 31))
+    w0 = jnp.where(big, zero, a0)
+    w1 = jnp.where(big, a0, a1)
+    w2 = jnp.where(big, a1, a2)
+    w3 = jnp.where(big, a2, zero)
+    un = [w0 & 0xFFFF, w0 >> 16, w1 & 0xFFFF, w1 >> 16,
+          w2 & 0xFFFF, w2 >> 16, w3 & 0xFFFF, w3 >> 16]
+    B = 1 << 16
+    q = [zero] * 4
+    # un[7] < 2^15 <= vn[3] after normalization, so quotient digit 4 is
+    # always zero: iterate j = 3..0 only.
+    for j in (3, 2, 1, 0):
+        num = (un[j + 4] << 16) | un[j + 3]
+        qhat = num // vn[3]             # the one hardware division
+        rhat = num - qhat * vn[3]
+        for _ in range(2):              # Knuth: at most two corrections
+            ok = rhat < B
+            over = (qhat >= B) | (qhat * vn[2] > ((rhat << 16) | un[j + 2]))
+            dec = (ok & over).astype(u32)
+            qhat = qhat - dec
+            rhat = rhat + vn[3] * dec
+        # Multiply-subtract qhat * vn from un[j..j+4] in 16-bit digits;
+        # borrows ride the uint32 wraparound (t's top bits encode the
+        # signed borrow because |t| < 2^17).
+        k = zero
+        for i in range(4):
+            p = qhat * vn[i]
+            t = un[i + j] - k - (p & 0xFFFF)
+            un[i + j] = t & 0xFFFF
+            k = (p >> 16) + ((B - (t >> 16)) & 0xFFFF)
+        t = un[j + 4] - k
+        neg = t >> 31                   # borrow out: qhat was one too big
+        negb = neg.astype(bool)
+        q[j] = qhat - neg
+        c = zero
+        for i in range(4):              # add-back, selected where needed
+            w = un[i + j] + vn[i] + c
+            un[i + j] = jnp.where(negb, w & 0xFFFF, un[i + j])
+            c = w >> 16
+        un[j + 4] = jnp.where(negb, (t + c) & 0xFFFF, t & 0xFFFF)
+    # Remainder: un[0..3] denormalized by s; quotient digits q[0..3].
+    r_lo_n = un[0] | (un[1] << 16)
+    r_hi_n = un[2] | (un[3] << 16)
+    down = jnp.where(sl == 0, zero, r_hi_n << ((32 - sl) & 31))
+    rlo_s = (r_lo_n >> sl) | down
+    rhi_s = r_hi_n >> sl
+    quo = (jnp.where(bz, zero, q[0] | (q[1] << 16)),
+           jnp.where(bz, zero, q[2] | (q[3] << 16)))
+    rem = (jnp.where(bz, zero, jnp.where(big, rhi_s, rlo_s)),
+           jnp.where(bz, zero, jnp.where(big, zero, rhi_s)))
+    return quo, rem
+
+
+def _apply_pair_op(op: FusedOp, xs: list, width: int, mask, layout):
+    """One opcode on uint32 (lo, hi) pair values — the 64-bit-lane mirror
+    of ``_apply_word_op`` (identical value semantics, pinned by tests)."""
+    u32 = jnp.uint32
+
+    def trunc(lo, hi):  # modulo 2**width; free at the natural word
+        return (lo, hi) if mask is None else (lo & mask[0], hi & mask[1])
+
+    if op.opcode == "and":
+        return (xs[0][0] & xs[1][0], xs[0][1] & xs[1][1])
+    if op.opcode == "or":
+        return (xs[0][0] | xs[1][0], xs[0][1] | xs[1][1])
+    if op.opcode == "xor":
+        return (xs[0][0] ^ xs[1][0], xs[0][1] ^ xs[1][1])
+    if op.opcode == "add":
+        (alo, ahi), (blo, bhi) = xs[0], xs[1]
+        slo = alo + blo
+        return trunc(slo, ahi + bhi + (slo < alo).astype(u32))
+    if op.opcode == "sub":
+        (alo, ahi), (blo, bhi) = xs[0], xs[1]
+        return trunc(alo - blo, ahi - bhi - (alo < blo).astype(u32))
+    if op.opcode == "mul":
+        (alo, ahi), (blo, bhi) = xs[0], xs[1]
+        hi = _mulhi32(alo, blo) + alo * bhi + ahi * blo  # mod-2^64 high
+        return trunc(alo * blo, hi)
+    if op.opcode in ("div", "mod", "divmod"):
+        q, r = _pair_divmod(xs[0], xs[1])
+        if op.opcode == "div":
+            return q
+        if op.opcode == "mod":
+            return r
+        return (q, r)  # tuple value, consumed by fst/snd
+    if op.opcode == "fst":
+        return xs[0][0]
+    if op.opcode == "snd":
+        return xs[0][1]
+    zero = jnp.zeros_like(xs[0][0])
+    if op.opcode == "less":
+        (alo, ahi), (blo, bhi) = xs[0], xs[1]
+        lt = (ahi < bhi) | ((ahi == bhi) & (alo < blo))
+        return (lt.astype(u32), zero)
+    if op.opcode == "popcount":
+        lo, hi = xs[0]
+        pc = (_word_popcount(lo, LAYOUT32, jnp)
+              + _word_popcount(hi, LAYOUT32, jnp))
+        return (pc, zero)
+    if op.opcode == "reduce_and":
+        w = op.param or width
+        if w > layout.word_bits:  # mask(w) exceeds any width-bit value
+            return (zero, zero)
+        lo, hi = xs[0]
+        mlo = (1 << min(w, 32)) - 1
+        mhi = 0 if w <= 32 else (1 << (w - 32)) - 1
+        eq = (lo == u32(mlo)) & (hi == u32(mhi))
+        return (eq.astype(u32), zero)
+    if op.opcode == "reduce_or":
+        lo, hi = xs[0]
+        return (((lo | hi) != 0).astype(u32), zero)
+    if op.opcode == "reduce_xor":
+        lo, hi = xs[0]
+        return (_word_popcount(lo ^ hi, LAYOUT32, jnp) & u32(1), zero)
+    raise KeyError(op.opcode)
+
+
+def run_program_pairs(program: FusedProgram, leaves: list) -> tuple:
+    """The jitted 64-bit lane path: each flat int32 wire leaf (lo, hi
+    interleaved little-endian) deinterleaves into a uint32 (lo, hi) pair,
+    the whole program evaluates on pairs with carries chained across the
+    pair in every arithmetic op, and outputs re-interleave to wire. Pure
+    jnp — one fused elementwise DAG under jax.jit, no uint64 dtype (so no
+    global x64 flag), bit-exact against ``run_program_words`` (tests)."""
+    layout = program.layout
+    width = program.width
+    mask = None
+    if width < layout.word_bits:
+        mask = (jnp.asarray((1 << min(width, 32)) - 1, jnp.uint32),
+                jnp.asarray(0 if width <= 32 else (1 << (width - 32)) - 1,
+                            jnp.uint32))
+    env = []
+    for w in leaves:
+        v = jax.lax.bitcast_convert_type(jnp.asarray(w),
+                                         jnp.uint32).reshape(-1, 2)
+        lo, hi = v[:, 0], v[:, 1]
+        env.append((lo, hi) if mask is None
+                   else (lo & mask[0], hi & mask[1]))
+    for op in program.ops:
+        env.append(_apply_pair_op(op, [env[a] for a in op.args],
+                                  width, mask, layout))
+    outs = []
+    for vid in program.outputs:
+        lo, hi = env[vid]
+        wire = jnp.stack([lo, hi], axis=-1).reshape(-1)
+        outs.append(jax.lax.bitcast_convert_type(wire, jnp.int32))
+    return tuple(outs)
 
 
 # --------------------------------------------------------------------- #
@@ -523,33 +767,72 @@ def _donating(fn, n_leaves: int):
     return call
 
 
+# Per-call NumPy short-circuit threshold for word pipelines, in
+# wire-words x ops: below it, XLA dispatch overhead (which grows with
+# the leaf count — each argument is canonicalized and placed) costs more
+# than evaluating the whole program in NumPy with last-use buffer
+# recycling (a k-clique AND pair over a few lanes is ~100 wire-ops and
+# stays NumPy; the paper-scale 30-leaf BMI scan is ~10^7 wire-ops and
+# the 2M-lane prog16 staple is ~10^7 — both win jitted, where XLA's
+# one-pass loop fusion replaces ~n_ops full-array traversals with one).
+# Read at call time so tests can pin either path.
+_NP_CUTOFF_WIRE_OPS = 1 << 20
+
+
 def build_words_pipeline(program: FusedProgram, donate: bool = False):
     """Word-domain pipeline (the CPU execution path): the bracketing
     transpose pair cancels algebraically, so the program fuses directly
-    on horizontal words. At the 32-bit layout this is one jax.jit trace;
-    at the 64-bit layout it evaluates in NumPy (uint64 under jax needs
-    the global x64 flag, which would change dtype promotion repo-wide),
-    so ``donate`` is a no-op there — NumPy has no device buffers."""
+    on horizontal words — one jax.jit trace at EVERY layout. 32-bit
+    lanes evaluate on uint32 words; 64-bit lanes evaluate as uint32
+    (lo, hi) pairs (``run_program_pairs``, carry chained across the pair
+    in the IR), so the wide path no longer drops to un-jitted NumPy and
+    ``donate`` works at both layouts. Tiny programs short-circuit per
+    call to the NumPy word evaluator (``_NP_CUTOFF_WIRE_OPS``), and so
+    do 64-bit programs containing division: x86 has no SIMD integer
+    divide, so the pair evaluator's Knuth long division scalarizes the
+    fused XLA loop (~100 elementwise passes per divmod), while NumPy's
+    hardware 64-bit ``divq`` is one pass — with copy-on-write staging
+    the host path wins at every size."""
     layout = program.layout
-    if layout.word_bits != 32:
-        def np_word_pipeline(*leaves):
-            outs = run_program_words(
-                program, [layout.from_wire(x) for x in leaves])
-            return tuple(layout.to_wire(o) for o in outs)
+    n_ops = max(1, len(program.ops))
+    np_div64 = layout.word_bits == 64 and any(
+        op.opcode in ("div", "mod", "divmod") for op in program.ops)
 
-        return np_word_pipeline
+    if layout.word_bits == 32:
+        def core(*leaves):
+            outs = run_program_words(
+                program,
+                [jax.lax.bitcast_convert_type(x, jnp.uint32)
+                 for x in leaves])
+            return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
+                         for o in outs)
+    else:
+        def core(*leaves):
+            return run_program_pairs(program, leaves)
+
+    jitted = (_donating(core, program.n_inputs) if donate
+              else jax.jit(core))
+
+    def np_words(*leaves):
+        outs = run_program_words(
+            program, [layout.from_wire(np.asarray(x)) for x in leaves])
+        return tuple(layout.to_wire(o) for o in outs)
 
     def word_pipeline(*leaves):
-        outs = run_program_words(
-            program,
-            [jax.lax.bitcast_convert_type(x, jnp.uint32)
-             for x in leaves])
-        return tuple(jax.lax.bitcast_convert_type(o, jnp.int32)
-                     for o in outs)
+        if np_div64:
+            return np_words(*leaves)
+        if leaves and leaves[0].size * n_ops <= _NP_CUTOFF_WIRE_OPS \
+                and all(isinstance(x, np.ndarray) for x in leaves):
+            return np_words(*leaves)
+        return jitted(*leaves)
 
-    if donate:
-        return _donating(word_pipeline, program.n_inputs)
-    return jax.jit(word_pipeline)
+    # Leaf-cache protocol (engine._resolve_cached_leaves): cached device
+    # buffers are only worth serving when the call will actually run
+    # jitted — and never into a donating trace.
+    word_pipeline.wants_device = (
+        lambda wire_words: not donate and not np_div64
+        and wire_words * n_ops > _NP_CUTOFF_WIRE_OPS)
+    return word_pipeline
 
 
 def build_sharded_words_pipeline(program: FusedProgram,
@@ -619,6 +902,13 @@ def build_vertical_pipeline(program: FusedProgram, use_pallas: bool,
         return tuple(layout.unpack_planes(outs[t], transpose, width)
                      for t in range(outs.shape[0]))
 
-    if donate:
-        return _donating(pipeline, program.n_inputs)
-    return jax.jit(pipeline)
+    fn = _donating(pipeline, program.n_inputs) if donate \
+        else jax.jit(pipeline)
+
+    def vertical_pipeline(*leaves):
+        return fn(*leaves)
+
+    # Leaf-cache protocol: the vertical path is always jitted, so cached
+    # device buffers are always worth serving (unless donating).
+    vertical_pipeline.wants_device = lambda wire_words: not donate
+    return vertical_pipeline

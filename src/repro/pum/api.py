@@ -84,6 +84,7 @@ class Device:
                 fuse=config.fuse, flush_threshold=config.flush_threshold,
                 flush_memory_bytes=config.flush_memory_bytes,
                 donate_leaves=config.donate_leaves, layout=config.layout,
+                leaf_cache_bytes=config.leaf_cache_bytes,
                 fused_backend=config.fused_backend,
                 ref_postponing=config.ref_postponing,
                 reliability=config.reliability,
@@ -300,6 +301,12 @@ class Device:
         backend/layout switch is then deferred while graphs are
         pending."""
         cfg = plan.apply(self.config, cost_plane=cost_plane)
+        # A fuse flip cannot be applied to a live engine (it would
+        # rebuild the whole execution pipeline mid-stream); the
+        # recommendation stays on the returned plan for the caller to
+        # construct a new device from.
+        if cfg.fuse != self.config.fuse:
+            cfg = cfg.replace(fuse=self.config.fuse)
         eng = self.engine
         if flush:
             eng.flush_all()
@@ -681,6 +688,7 @@ def as_device(obj) -> Device:
             fuse=obj.fuse, flush_threshold=obj.flush_threshold,
             flush_memory_bytes=obj.flush_memory_bytes,
             donate_leaves=obj.donate_leaves, success_db=obj.db,
+            leaf_cache_bytes=obj.leaf_cache_bytes,
             layout=obj.layout, fused_backend=obj.fused_backend,
             ref_postponing=obj.ref_postponing,
             reliability=(None if obj.reliability is None

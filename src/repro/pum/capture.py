@@ -48,7 +48,7 @@ import threading
 
 import numpy as np
 
-from repro.core.engine import LazyArray
+from repro.core.engine import LazyArray, _stage_wire
 from repro.kernels.fused_program import (FusedOp, FusedProgram, get_pipeline,
                                          optimize_program)
 
@@ -67,6 +67,7 @@ class _Recording:
     width: int
     layout: object
     recipe: tuple                    # charge log to replay per call
+    fp_idx: object = None            # 257-sample fingerprint index (cache)
 
 
 class CaptureHandle:
@@ -226,16 +227,15 @@ class CapturedProgram:
             if li in by_leaf:
                 plan.append(("in", by_leaf[li]))
             else:
-                flat = g.leaves[li]
-                if pad:
-                    flat = np.pad(flat, (0, pad))
-                plan.append(("const", g.layout.to_wire(flat)))
+                # Closure constants keep the graph's staged wire (already
+                # padded; the record-time snapshot or a cached upload).
+                plan.append(("const", g.stage_leaf(li)))
         rec = _Recording(
             pipeline=pipeline, plan=plan,
             out_slots=[out_pos[unique.index(i)] for i in out_ops],
             out_shapes=[getattr(o, "shape", ()) for o in outs],
             single=single, n=g.n, pad=pad, width=g.width, layout=g.layout,
-            recipe=tuple(recipe))
+            recipe=tuple(recipe), fp_idx=g._fp_idx)
         # First-call outputs come from one replay (the recording itself
         # already charged the cost plane through the ops in ``fn``).
         values = self._replay(rec, norm, charge=False)
@@ -249,26 +249,55 @@ class CapturedProgram:
     def _replay(self, rec: _Recording, norm: list[np.ndarray],
                 charge: bool = True) -> list[np.ndarray]:
         eng = self._device.engine
+        cache = eng._leaf_cache
+        wants = getattr(rec.pipeline, "wants_device", None)
+        # Capture pipelines never donate, so cached device buffers are
+        # safe to serve whenever the pipeline runs jitted.
+        use_dev = cache is not None and wants is not None and wants(
+            (rec.n + rec.pad) * rec.layout.wire_words_per_lane)
+        hits = misses = 0
         leaves = []
         for kind, v in rec.plan:
             if kind == "const":
                 leaves.append(v)
                 continue
-            flat = norm[v].ravel()
-            if flat.size * 1 != rec.n:
+            arr = norm[v]
+            rav = arr.ravel()
+            if rav.size != rec.n:
                 raise ValueError(
-                    f"capture({self.name}): input {v} has {flat.size} "
+                    f"capture({self.name}): input {v} has {rav.size} "
                     f"lanes; this recording expects {rec.n}")
-            if rec.width < 64 and flat.size \
-                    and int(flat.max()) >> rec.width:
-                raise ValueError(
-                    f"fused dataplane computes modulo 2**{rec.width}; an "
-                    f"operand has bits at or above bit {rec.width} — mask "
-                    f"inputs to the engine width or use fuse=False")
-            flat = flat.astype(rec.layout.np_dtype)
-            if rec.pad:
-                flat = np.pad(flat, (0, rec.pad))
-            leaves.append(rec.layout.to_wire(flat))
+            entry = ckey = fp = None
+            shared = rav.base is not None or rav is arr
+            if cache is not None and shared and rav.size:
+                fp = rav[rec.fp_idx]
+                ckey = (rav.__array_interface__["data"][0], rav.nbytes,
+                        rec.layout.name, False)
+                entry = cache.lookup(ckey, fp)
+            if entry is None:
+                misses += 1
+                if rec.width < 64 and rav.size \
+                        and int(rav.max()) >> rec.width:
+                    raise ValueError(
+                        f"fused dataplane computes modulo 2**{rec.width};"
+                        f" an operand has bits at or above bit "
+                        f"{rec.width} — mask inputs to the engine width "
+                        f"or use fuse=False")
+                wire = _stage_wire(rav, rec.pad, rec.layout, copy=shared)
+                if ckey is not None:
+                    entry, _ = cache.insert(ckey, fp, wire)
+                if entry is None:
+                    leaves.append(wire)
+                    continue
+            else:
+                hits += 1
+            leaves.append(cache.device_buffer(entry) if use_dev
+                          else entry.wire)
+        if eng.tracer is not None and (hits or misses):
+            if hits:
+                eng.counters.inc("engine.leaf_cache.hits", hits)
+            if misses:
+                eng.counters.inc("engine.leaf_cache.misses", misses)
         if charge:
             # Charge into the capture's own client context: recording and
             # every replay land in ONE stats shard, so totals accumulate

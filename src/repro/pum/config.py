@@ -52,6 +52,12 @@ class EngineConfig:
       (``jax.jit(..., donate_argnums=...)``): XLA may reuse them for
       intermediates, cutting pipeline peak memory. Results are
       bit-identical either way.
+    * ``leaf_cache_bytes`` — byte budget of the per-device leaf cache
+      (staged wire snapshots keyed by buffer pointer + content
+      fingerprint, re-served across flushes and capture replays; see
+      docs/execution-pipeline.md "Flush-path memory traffic"). ``0`` or
+      ``None`` disables the cache. Results and ``EngineStats`` are
+      bit-identical either way.
     * ``success_db`` — optional ``SuccessRateDb`` override for the
       characterization data (tests/sensitivity sweeps).
     * ``reliability`` — ``None`` (default: every path unchanged), or a
@@ -76,6 +82,7 @@ class EngineConfig:
     flush_threshold: int | None = 1024
     flush_memory_bytes: int | None = 1 << 30
     donate_leaves: bool = False
+    leaf_cache_bytes: int | None = 1 << 26
     success_db: Any = None
     layout: Any = None
     fused_backend: str | None = None
@@ -91,6 +98,8 @@ class EngineConfig:
         if self.cmd_buffer_lookahead < 1:
             raise ValueError("cmd_buffer_lookahead must be >= 1 (each "
                              "bank machine holds at least one sequence)")
+        if self.leaf_cache_bytes is not None and self.leaf_cache_bytes < 0:
+            raise ValueError("leaf_cache_bytes must be >= 0 or None")
         if not 1 <= self.ref_postponing <= 8:
             raise ValueError("ref_postponing must be in [1, 8] (JEDEC "
                              "allows postponing up to 8 REFs)")

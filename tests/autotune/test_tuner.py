@@ -71,6 +71,31 @@ def test_controller_signal_selects_ref_and_lookahead():
     assert plain.ref_postponing == 1
 
 
+def test_leaf_upload_bound_raw_chain_recommends_eager():
+    """A doctored BMI-shaped window — long raw AND chains over huge
+    bitmaps whose staged leaf-snapshot bytes dominate the flush — must
+    flip the recommendation off the fused pipeline: the leaf-upload term
+    prices what the flush path actually moves, and eager streams
+    operands in place without snapshotting. The same window with zero
+    staged bytes (a warm leaf cache) keeps fused."""
+    cfg = pum.EngineConfig(width=32, layout=64)
+    shape = dict(ops=480, flushes=16, ops_per_flush=30.0,
+                 lanes=2_097_152.0, op_mix={"and": 1.0},
+                 raw_fraction=1.0, cache_hit_rate=1.0,
+                 width=32, word_bits=64)
+    cold = profile_of(**shape, leaf_bytes_per_flush=2e8,
+                      leaf_cache_hit_rate=0.0)
+    plan = Tuner().tune(cold, cfg)
+    assert plan.fuse is False
+    assert plan.score_s < plan.baseline_score_s
+    # Round-trips keep the recommendation.
+    assert TunedPlan.from_dict(plan.as_dict()).fuse is False
+    # apply() carries it; EngineConfig stays valid.
+    assert plan.apply(cfg).fuse is False
+    warm = profile_of(**shape)
+    assert Tuner().tune(warm, cfg).fuse is True
+
+
 def test_candidates_respect_registry_constraints():
     cfg = pum.EngineConfig(width=48)  # only 64-bit-layout backends fit
     for cand in Tuner().candidates(cfg):

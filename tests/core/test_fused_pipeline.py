@@ -271,8 +271,28 @@ def test_fused_arithmetic_rejects_out_of_width_operands():
     for op in (e.add, e.sub, e.mul, e.div, e.mod, e.less_than):
         with pytest.raises(ValueError, match="modulo"):
             op(big, one)
-    with pytest.raises(ValueError, match="modulo"):
-        e.popcount(big)
+    # popcount is the exception: out-of-width operands route through the
+    # raw planewise graph (like and/or/xor) and the materialize fold sums
+    # the per-lane counts — bit-exact with eager's raw-word popcount.
+    np.testing.assert_array_equal(np.asarray(e.popcount(big)),
+                                  np.array([1, 1], np.uint64))
+
+
+def test_fused_raw_popcount_folds_lane_counts():
+    """popcount on the raw packed-bitmap path: the evaluators emit
+    per-lane partial counts and the materialize fold sums them into the
+    caller-visible per-word count; a pending raw popcount consumed by a
+    further op materializes (folds) first. Both bit-exact with eager."""
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, 2**64, 257, dtype=np.uint64)
+    b = rng.integers(0, 2**64, 257, dtype=np.uint64)
+    want = _vec_popcount(a & b)
+    for fuse in (False, True):
+        e = PulsarEngine(width=32, fuse=fuse)
+        pc = e._popcount(e._and(a, b), width=64)
+        composed = np.asarray(e._mul(pc, np.full_like(a, 2)), np.uint64)
+        np.testing.assert_array_equal(np.asarray(pc, np.uint64), want)
+        np.testing.assert_array_equal(composed, want * 2)
 
 
 def test_fused_planewise_raw_bitmap_path():

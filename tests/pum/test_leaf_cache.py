@@ -1,0 +1,273 @@
+"""Flush-path data movement: the copy-on-write leaf-snapshot contract,
+the device-resident leaf cache (keying, eviction, donation interaction,
+capture/async-flush replays), and the jitted uint32-pair 64-bit
+evaluator's divmod under adversarial operands.
+
+The invariant under test throughout: outputs and ``EngineStats`` are
+bit-identical with the leaf cache on, off, or disabled — the cache and
+the snapshot elision are execution details, never semantics knobs.
+"""
+
+import numpy as np
+import pytest
+
+import repro.pum as pum
+from repro.kernels.fused_program import (FusedOp, FusedProgram,
+                                         run_program_pairs,
+                                         run_program_words)
+from repro.kernels.plane_layout import LAYOUT64
+
+pytestmark = pytest.mark.fused
+
+
+# --------------------------------------------------------------------- #
+# Copy-on-write fingerprint contract
+# --------------------------------------------------------------------- #
+
+
+def test_inplace_mutation_between_recorded_uses_registers_fresh_leaf():
+    """The engine's leaf guarantee: mutating an array in place between
+    two recorded uses re-registers it as a *fresh* leaf — each use sees
+    the content at its own registration time, at any array size."""
+    dev = pum.device(width=32, fuse=True)
+    rng = np.random.default_rng(5)
+    mod = np.uint64(1) << np.uint64(32)
+    for n in (17, 256, 100_000):
+        a = rng.integers(0, 2**32, n, dtype=np.uint64)
+        before = a.copy()
+        y = dev.asarray(a) + 1
+        # Mutate at a fingerprint-sampled index (the contract's domain;
+        # unsampled-index mutation of shared arrays is the documented
+        # 257-sample hole).
+        idx = np.linspace(0, n - 1, min(n, 257)).astype(np.int64)[-2]
+        a[idx] ^= np.uint64(0x5A5A)
+        z = dev.asarray(a) + 1
+        np.testing.assert_array_equal(y.to_numpy(), (before + 1) % mod)
+        np.testing.assert_array_equal(z.to_numpy(), (a + 1) % mod)
+    dev.close()
+
+
+def test_pointer_reuse_with_new_content_misses_and_replaces():
+    """A reused allocation with new content must not serve the stale
+    cached upload: the fingerprint mismatch misses and replaces."""
+    dev = pum.device(width=32, fuse=True)
+    a = np.arange(4096, dtype=np.uint64)
+    r1 = (dev.asarray(a) ^ 3).to_numpy()
+    np.testing.assert_array_equal(r1, np.arange(4096, dtype=np.uint64) ^ 3)
+    a[:] = a[::-1]  # same buffer, same pointer, new bytes
+    r2 = (dev.asarray(a) ^ 3).to_numpy()
+    np.testing.assert_array_equal(r2, a ^ 3)
+    dev.close()
+
+
+# --------------------------------------------------------------------- #
+# Cache on/off identity
+# --------------------------------------------------------------------- #
+
+
+def _mixed_program(dev, a, b):
+    x, y = dev.asarray(a), dev.asarray(b)
+    t = (x + y) * x
+    t = t - y
+    t = t // (y + 1)
+    t = t ^ x
+    return t.to_numpy()
+
+
+def test_outputs_and_stats_identical_with_cache_on_off():
+    outs, stats = [], []
+    for lcb in (1 << 26, 0, None):
+        dev = pum.device(width=16, fuse=True, leaf_cache_bytes=lcb)
+        rng = np.random.default_rng(11)
+        a = rng.integers(0, 1 << 16, 3000, dtype=np.uint64)
+        b = rng.integers(0, 1 << 16, 3000, dtype=np.uint64)
+        got = [_mixed_program(dev, a, b) for _ in range(3)]
+        assert all(np.array_equal(got[0], g) for g in got[1:])
+        outs.append(got[0])
+        stats.append(dev.stats)
+        dev.close()
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+    assert stats[0] == stats[1] == stats[2]
+
+
+def test_leaf_cache_bytes_validation_and_disable():
+    with pytest.raises(ValueError, match="leaf_cache_bytes"):
+        pum.EngineConfig(leaf_cache_bytes=-1)
+    assert pum.device(width=8, fuse=True,
+                      leaf_cache_bytes=0).engine._leaf_cache is None
+    assert pum.device(width=8, fuse=True,
+                      leaf_cache_bytes=None).engine._leaf_cache is None
+
+
+# --------------------------------------------------------------------- #
+# Replay bit-exactness: flush_async and capture
+# --------------------------------------------------------------------- #
+
+
+def test_cache_hit_replays_bit_exact_across_flush_async_and_capture():
+    dev = pum.device(width=16, fuse=True)
+    n = 50_000
+    a = (np.arange(n, dtype=np.uint64) * 7) % (1 << 16)
+    b = (np.arange(n, dtype=np.uint64) * 13 + 5) % (1 << 16)
+    mod = np.uint64(1) << np.uint64(16)
+
+    prog = dev.capture(lambda x, y: (x + y) * x)
+    want = ((a + b) % mod * a) % mod
+    np.testing.assert_array_equal(prog(a, b), want)  # records + compiles
+    for _ in range(3):  # replays: cache hits serve device buffers
+        np.testing.assert_array_equal(prog(a, b), want)
+    h = prog.call_async(a, b)
+    np.testing.assert_array_equal(h.result(), want)
+
+    # The same operands through ordinary flush_async on the device.
+    for _ in range(2):
+        x = dev.asarray(a) + dev.asarray(b)
+        dev.flush_async().result()
+        np.testing.assert_array_equal(x.to_numpy(), (a + b) % mod)
+    dev.close()
+
+
+# --------------------------------------------------------------------- #
+# Donation-vs-cache interaction
+# --------------------------------------------------------------------- #
+
+
+def test_donation_never_serves_cached_device_buffers(monkeypatch):
+    """Donated buffers are evicted, cached ones are never donated: a
+    donating flush serves the private host wire (jax donates a fresh
+    upload) and drops the entry's device residency — outputs and stats
+    stay identical to the non-donating device."""
+    import repro.kernels.fused_program as fp
+    monkeypatch.setattr(fp, "_NP_CUTOFF_WIRE_OPS", 1 << 10)  # pin jitted
+    rng = np.random.default_rng(9)
+    a = rng.integers(0, 2**64, 65536, dtype=np.uint64)
+    b = rng.integers(0, 2**64, 65536, dtype=np.uint64)
+
+    def prog(dev):
+        x = dev.asarray(a)
+        t = (x & b) | (x ^ b)
+        t = (t & b) ^ x
+        return t.to_numpy()
+
+    don = pum.device(width=32, fuse=True, donate_leaves=True)
+    plain = pum.device(width=32, fuse=True)
+    cold = [prog(d) for d in (don, plain)]
+    warm = [prog(d) for d in (don, plain)]  # leaf-cache hits on both
+    np.testing.assert_array_equal(cold[0], cold[1])
+    np.testing.assert_array_equal(warm[0], warm[1])
+    np.testing.assert_array_equal(cold[0], warm[0])
+    assert don.stats == plain.stats
+
+    dcache = don.engine._leaf_cache
+    assert len(dcache) > 0
+    assert all(e.dev is None for e in dcache._entries.values())
+    # The non-donating jitted raw path commits device buffers on hits.
+    pcache = plain.engine._leaf_cache
+    assert any(e.dev is not None for e in pcache._entries.values())
+    don.close()
+    plain.close()
+
+
+# --------------------------------------------------------------------- #
+# Telemetry: counters + span args (tracer-gated)
+# --------------------------------------------------------------------- #
+
+
+def test_leaf_cache_counters_and_leaf_upload_span_args():
+    dev = pum.device(width=32, fuse=True)
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 2**64, 8192, dtype=np.uint64)
+    b = rng.integers(0, 2**64, 8192, dtype=np.uint64)
+    with pum.profile(dev) as tr:
+        (dev.asarray(a) & b).to_numpy()  # cold: stages + inserts
+        (dev.asarray(a) & b).to_numpy()  # warm: pointer+fp hits
+    assert dev.counters["engine.leaf_cache.misses"] >= 2
+    assert dev.counters["engine.leaf_cache.hits"] >= 2
+    assert dev.counters["engine.leaf_bytes_staged"] > 0
+    assert dev.counters["engine.snapshot_bytes_elided"] > 0
+    ups = [args for (name, _, _, args) in tr.events
+           if name == "flush.leaf_upload"]
+    assert len(ups) >= 2
+    assert all("bytes_staged" in u and "bytes_skipped" in u for u in ups)
+    assert any(u["bytes_skipped"] > 0 for u in ups)  # the warm flush
+    dev.close()
+
+
+def test_untraced_flushes_record_no_counters():
+    dev = pum.device(width=32, fuse=True)
+    a = np.arange(1024, dtype=np.uint64)
+    for _ in range(2):
+        (dev.asarray(a) + 1).to_numpy()
+    assert dev.counters.get("engine.leaf_cache.hits") == 0
+    assert dev.counters.get("engine.leaf_bytes_staged") == 0
+    dev.close()
+
+
+# --------------------------------------------------------------------- #
+# Eviction and the byte budget
+# --------------------------------------------------------------------- #
+
+
+def test_lru_eviction_respects_byte_budget():
+    dev = pum.device(width=32, fuse=True, leaf_cache_bytes=8192)
+    cache = dev.engine._leaf_cache
+    arrs = [np.arange(512, dtype=np.uint64) + i for i in range(6)]
+    with pum.profile(dev):
+        for a in arrs:  # 2 KiB of wire each: 6 leaves overflow 8 KiB
+            (dev.asarray(a) + 1).to_numpy()
+    assert dev.counters["engine.leaf_cache.evictions"] >= 1
+    assert cache.nbytes <= 8192
+    assert 1 <= len(cache) <= 4
+    dev.close()
+
+
+def test_oversized_leaf_is_not_cached():
+    dev = pum.device(width=32, fuse=True, leaf_cache_bytes=1024)
+    a = np.arange(4096, dtype=np.uint64)  # 16 KiB of wire > budget
+    r = (dev.asarray(a) + 1).to_numpy()
+    np.testing.assert_array_equal(r, a + 1)
+    assert len(dev.engine._leaf_cache) == 0
+    dev.close()
+
+
+# --------------------------------------------------------------------- #
+# The jitted uint32-pair evaluator: adversarial divmod
+# --------------------------------------------------------------------- #
+
+
+def _stratified(rng, n, width):
+    """Operands whose bit-length is uniform in [0, width] — exercises
+    every normalization shift of the Knuth division."""
+    bits = rng.integers(0, width + 1, n)
+    v = rng.integers(0, 1 << 64, n, dtype=np.uint64)
+    shift = (np.uint64(64) - np.maximum(bits, 1).astype(np.uint64))
+    out = np.where(bits == 0, np.uint64(0), v >> shift).astype(np.uint64)
+    mask = np.uint64((1 << width) - 1 if width < 64 else (1 << 64) - 1)
+    return out & mask
+
+
+@pytest.mark.parametrize("width", [64, 48, 33])
+def test_run_program_pairs_divmod_adversarial(width):
+    rng = np.random.default_rng(7)
+    n = 8192
+    a = _stratified(rng, n, width)
+    b = _stratified(rng, n, width)
+    b[::97] = 0  # zero divisors yield 0 (the unsigned NumPy semantics)
+    if width == 64:  # Knuth-hard seeds: dense dividend, near-power divisor
+        a[:4] = np.array([0x7FFF800100000000, 0x8000000000000000,
+                          (1 << 64) - 1, 0x0001FFFFFFFFFFFF], np.uint64)
+        b[:4] = np.array([0x800000000001, 0x100000001, 0xFFFFFFFF,
+                          0x0000FFFFFFFF0001], np.uint64)
+    prog = FusedProgram(
+        width=width, n_inputs=2,
+        ops=(FusedOp("divmod", (0, 1)), FusedOp("fst", (2,)),
+             FusedOp("snd", (2,)), FusedOp("mul", (3, 1)),
+             FusedOp("add", (5, 4))),
+        outputs=(3, 4, 6), layout=LAYOUT64)
+    wires = [LAYOUT64.to_wire(x) for x in (a, b)]
+    got = [LAYOUT64.from_wire(np.asarray(o))
+           for o in run_program_pairs(prog, wires)]
+    want = run_program_words(prog, [LAYOUT64.from_wire(w) for w in wires])
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, np.asarray(w, dtype=g.dtype))

@@ -82,6 +82,24 @@ def test_host_grace_loosens_cross_host_threshold():
         baseline, _doc({"a": 300.0}, host=other_host)) != []
 
 
+def test_fused_slower_than_eager_sibling_fails_both_modes():
+    """The app.* fused-vs-eager invariant: a fresh emit whose fused row
+    regresses below its eager sibling fails even the structural gate
+    (what CI runs on every push), regardless of the committed baseline."""
+    rows = {"app.x_eager": 100.0, "app.x_fused": 150.0}
+    for mode in (False, True):
+        failures = bench_compare.compare(_doc(rows), _doc(rows),
+                                         check_rows_only=mode)
+        assert any("app.x_fused" in f and "eager" in f
+                   for f in failures), failures
+    # Fused at or below eager passes; non-app rows are never paired.
+    ok = _doc({"app.x_eager": 100.0, "app.x_fused": 100.0,
+               "engine.y_fused": 999.0})
+    assert bench_compare.compare(ok, copy.deepcopy(ok)) == []
+    assert bench_compare.compare(ok, copy.deepcopy(ok),
+                                 check_rows_only=True) == []
+
+
 def test_non_positive_time_is_error():
     baseline = _doc({"a": 100.0})
     fresh = _doc({"a": -1.0})

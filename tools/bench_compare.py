@@ -8,6 +8,12 @@ Two modes:
   exactly the baseline's row set (a renamed or dropped benchmark row is a
   structured error naming the rows, replacing CI's old silent
   grep-for-row-names pipeline).
+
+Both modes additionally assert the fused-vs-eager invariant inside the
+fresh emit: every ``app.<name>_fused`` row with an ``app.<name>_eager``
+sibling must be at least as fast as the eager row (the fused pipeline
+regressing below eager is exactly the data-movement bug the flush-path
+leaf cache removed — this gate keeps it removed).
 * full (default) — per-row relative wall-time comparison:
   ``fresh_ns / baseline_ns`` must stay below ``--threshold`` (default
   1.25, i.e. a >25% regression fails). When the two files carry
@@ -64,6 +70,23 @@ def compare(baseline: dict, fresh: dict, threshold: float = 1.25,
         failures.append(f"rows missing from fresh run: {missing}")
     if extra:
         failures.append(f"rows not in baseline (refresh it?): {extra}")
+    # Fused-vs-eager invariant: for every app.<name>_fused row with an
+    # app.<name>_eager sibling, the compiled path must not lose to eager
+    # — the flush-path data-movement regression this repo already
+    # shipped once. Checked within the fresh emit itself (both modes:
+    # the structural gate is what CI runs on every push).
+    for name in sorted(f_rows):
+        if not (name.startswith("app.") and name.endswith("_fused")):
+            continue
+        eager = name[:-len("_fused")] + "_eager"
+        if eager not in f_rows:
+            continue
+        fn = f_rows[name].get("ns_per_call", 0)
+        en = f_rows[eager].get("ns_per_call", 0)
+        if fn > 0 and en > 0 and fn > en:
+            failures.append(
+                f"{name}: fused path slower than eager sibling "
+                f"({fn:.0f} ns vs {en:.0f} ns, {fn / en:.2f}x)")
     if check_rows_only:
         return failures
 

@@ -51,7 +51,8 @@ EXPECTED = {
         "backend", "banks", "chained", "cmd_buffer_lookahead",
         "controller", "donate_leaves",
         "flush_memory_bytes", "flush_threshold", "fuse", "fused_backend",
-        "layout", "mfr", "ref_postponing", "reliability", "row_bits",
+        "layout", "leaf_cache_bytes", "mfr",
+        "ref_postponing", "reliability", "row_bits",
         "seed", "success_db", "use_pulsar", "width",
     ],
     # Built-in registrations (a superset is allowed: registering more
